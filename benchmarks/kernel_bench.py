@@ -1,0 +1,66 @@
+"""Kernel-layer microbenchmarks: XLA reference attention paths on this
+host (the Pallas kernels target TPU; interpret mode is not a perf path,
+so we benchmark the XLA fallbacks the dry-run lowers + validate the
+kernels' numerics are in budget).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.decode_attention import decode_attention_ref
+from repro.kernels.flash_attention import flash_attention_ref
+from repro.models import attention as A
+
+
+def _time(fn, *args, n=5):
+    fn(*args)  # warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
+def bench() -> list:
+    out = []
+    key = jax.random.PRNGKey(0)
+    b, s, h, kv, d = 1, 2048, 8, 2, 64
+    q = jax.random.normal(key, (b, s, h, d), jnp.bfloat16)
+    k = jax.random.normal(key, (b, s, kv, d), jnp.bfloat16)
+    v = jax.random.normal(key, (b, s, kv, d), jnp.bfloat16)
+
+    dense = jax.jit(lambda q, k, v: A._attend_dense(
+        q, k, v, mask_kind="causal", window=None, cap=None))
+    t_dense = _time(dense, q, k, v)
+    flops = 4 * b * s * s * h * d / 2  # causal half
+    out.append(("kernel/xla_dense_attn_s2048", t_dense * 1e6,
+                f"{flops/t_dense/1e9:.1f} GFLOP/s host"))
+
+    s2 = 4096
+    q2 = jax.random.normal(key, (b, s2, h, d), jnp.bfloat16)
+    k2 = jax.random.normal(key, (b, s2, kv, d), jnp.bfloat16)
+    v2 = jax.random.normal(key, (b, s2, kv, d), jnp.bfloat16)
+    chunked = jax.jit(lambda q, k, v: A.attend_full(q, k, v))
+    t_chunk = _time(chunked, q2, k2, v2)
+    out.append(("kernel/xla_chunked_attn_s4096", t_chunk * 1e6,
+                "bounded-memory q-chunked scan path"))
+
+    qd = jax.random.normal(key, (8, h, d), jnp.bfloat16)
+    kc = jax.random.normal(key, (8, 8192, kv, d), jnp.bfloat16)
+    vc = jax.random.normal(key, (8, 8192, kv, d), jnp.bfloat16)
+    dec = jax.jit(lambda q, k, v: decode_attention_ref(
+        q, k, v, jnp.int32(8000)))
+    t_dec = _time(dec, qd, kc, vc)
+    bytes_read = 2 * 8 * 8192 * kv * d * 2
+    out.append(("kernel/decode_attn_kv8k", t_dec * 1e6,
+                f"{bytes_read/t_dec/1e9:.1f} GB/s host KV stream"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in bench():
+        print(f"{name},{us:.2f},{derived}")

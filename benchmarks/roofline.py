@@ -1,0 +1,79 @@
+"""Roofline table: reads launch/dryrun JSON artifacts -> §Roofline table.
+
+Per (arch × shape × mesh): the three per-chip terms (compute / memory /
+collective, seconds), dominant bottleneck, MODEL_FLOPS ratio, HBM fit.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(pattern: str = "*.json"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART, pattern))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r) -> str:
+    pod = "2pod" if r["multi_pod"] else "1pod"
+    base = f"{r['arch']:<24} {r['shape']:<12} {pod:<5}"
+    if r["status"] == "skip":
+        return base + f" SKIP ({r['skip_reason'][:60]})"
+    if r["status"] != "ok":
+        return base + f" ERROR ({r.get('error', '?')[:60]})"
+    ro = r["roofline"]
+    mem = r.get("memory", {})
+    fits = "Y" if mem.get("fits_16g_hbm") else "N"
+    live = mem.get("live_bytes_per_chip", 0) / 2**30
+    return (base +
+            f" {ro['compute_s']*1e3:>10.1f} {ro['memory_s']*1e3:>10.1f} "
+            f"{ro['collective_s']*1e3:>10.1f} {ro['dominant']:<10} "
+            f"{ro['roofline_fraction']:>5.3f} "
+            f"{ro['useful_flops_ratio']:>6.3f} {live:>6.2f}G {fits}")
+
+
+HEADER = (f"{'arch':<24} {'shape':<12} {'mesh':<5} {'C(ms)':>10} "
+          f"{'M(ms)':>10} {'X(ms)':>10} {'dominant':<10} {'frac':>5} "
+          f"{'useful':>6} {'HBM':>7} fit")
+
+
+def bench() -> list:
+    """CSV rows from the dry-run artifacts (baseline roofline table)."""
+    out = []
+    for r in load():
+        if r.get("tag"):
+            continue  # hillclimb iterations reported in §Perf, not here
+        pod = "2pod" if r["multi_pod"] else "1pod"
+        name = f"roofline/{r['arch']}/{r['shape']}/{pod}"
+        if r["status"] == "ok":
+            ro = r["roofline"]
+            out.append((name, ro["bound_s"] * 1e6,
+                        f"dom={ro['dominant']} "
+                        f"frac={ro['roofline_fraction']:.3f} "
+                        f"C={ro['compute_s']*1e3:.1f}ms "
+                        f"M={ro['memory_s']*1e3:.1f}ms "
+                        f"X={ro['collective_s']*1e3:.1f}ms"))
+        else:
+            out.append((name, 0.0, r["status"].upper()))
+    return out
+
+
+def main():
+    recs = [r for r in load() if not r.get("tag")]
+    print(HEADER)
+    for r in recs:
+        print(fmt_row(r))
+    ok = sum(r["status"] == "ok" for r in recs)
+    skip = sum(r["status"] == "skip" for r in recs)
+    err = sum(r["status"] == "error" for r in recs)
+    print(f"\n{ok} ok / {skip} skip / {err} error")
+
+
+if __name__ == "__main__":
+    main()

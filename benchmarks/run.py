@@ -1,0 +1,38 @@
+"""Benchmark entry point. One module per paper table/figure + system layer.
+Prints ``name,us_per_call,derived`` CSV.
+
+  fig2.py               — paper Fig 2(a)/(b) + claim checks (C1..C5)
+  roofline.py           — per-(arch × shape × mesh) roofline terms
+  serving_bench.py      — engine prefill/decode/generate throughput
+  orchestrator_bench.py — scheduling overhead, FT cost, speculation gain
+  kernel_bench.py       — attention path microbenchmarks
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig2, kernel_bench, orchestrator_bench,
+                            roofline, serving_bench)
+    modules = [("fig2", fig2), ("roofline", roofline),
+               ("serving", serving_bench),
+               ("orchestrator", orchestrator_bench),
+               ("kernel", kernel_bench)]
+    failures = 0
+    print("name,us_per_call,derived")
+    for name, mod in modules:
+        try:
+            for row_name, us, derived in mod.bench():
+                print(f"{row_name},{us:.2f},{derived}")
+        except Exception as e:  # keep the harness going; report at the end
+            failures += 1
+            print(f"{name}/ERROR,0.00,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmark module(s) failed")
+
+
+if __name__ == "__main__":
+    main()

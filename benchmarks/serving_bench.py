@@ -1,0 +1,69 @@
+"""Serving-engine microbenchmarks on this host (real compute, tiny model):
+prefill latency, decode step latency, tokens/s, continuous batching.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import RunConfig, build
+from repro.serving import Engine, Request, SlotScheduler
+
+
+def bench() -> list:
+    out = []
+    cfg = configs.smoke("qwen2-7b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, RunConfig(cache_pad=64))
+    b, s, new = 8, 32, 32
+
+    prompt = np.ones((b, s), np.int32)
+    engine.generate(params, prompt, max_new_tokens=2)  # warm
+    t0 = time.perf_counter()
+    logits, cache = engine._prefill(params, {"tokens": jax.numpy.asarray(prompt)})
+    jax.block_until_ready(logits)
+    prefill_s = time.perf_counter() - t0
+    out.append(("serving/prefill_b8_s32", prefill_s * 1e6,
+                f"{b*s/prefill_s:.0f} tok/s"))
+
+    tok = np.ones((b, 1), np.int32)
+    logits, cache = engine._decode(params, cache, tok)  # warm decode
+    t0 = time.perf_counter()
+    n = 16
+    for _ in range(n):
+        logits, cache = engine._decode(params, cache, tok)
+    jax.block_until_ready(logits)
+    dec_s = (time.perf_counter() - t0) / n
+    out.append(("serving/decode_step_b8", dec_s * 1e6,
+                f"{b/dec_s:.0f} tok/s"))
+
+    t0 = time.perf_counter()
+    res = engine.generate(params, prompt, max_new_tokens=new)
+    gen_s = time.perf_counter() - t0
+    out.append(("serving/generate_b8_new32", gen_s * 1e6 / new,
+                f"{b*new/gen_s:.0f} tok/s end-to-end"))
+
+    # continuous batching scheduler (pure scheduling overhead)
+    sched = SlotScheduler(n_slots=8)
+    for i in range(64):
+        sched.submit(Request(i, np.ones(8, np.int32), max_new_tokens=4))
+    t0 = time.perf_counter()
+    steps = 0
+    while not sched.idle:
+        sched.admit()
+        for slot in sched.active:
+            sched.step_done(slot, 1)
+        steps += 1
+    sch_s = time.perf_counter() - t0
+    out.append(("serving/slot_scheduler_64req", sch_s * 1e6 / 64,
+                f"{steps} decode rounds, all {len(sched.completed)} done"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in bench():
+        print(f"{name},{us:.2f},{derived}")

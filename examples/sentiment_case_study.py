@@ -1,0 +1,92 @@
+"""The paper's case study, end to end (deliverable b, serving driver):
+
+  1. TRAIN the DistilBERT-family classifier on synthetic IMDb until it
+     separates the classes (real training, this host),
+  2. serve the full dataset monolithically vs in parallel with REAL
+     inference through the orchestrator,
+  3. reproduce the paper-scale Fig. 2 sweep with the calibrated simulator
+     and validate the headline claims.
+
+    PYTHONPATH=src python examples/sentiment_case_study.py
+"""
+import jax
+import numpy as np
+
+from repro import configs
+from repro.core import (ArtifactStore, BatchJob, LatencyModel,
+                        MonolithicConfig, MonolithicRunner, Orchestrator,
+                        OrchestratorConfig, ServerlessFunction, decompose,
+                        merge)
+from repro.core.simulator import CaseStudyConfig, run_monolithic, run_parallel
+from repro.data import TrainLoader, imdb_reviews
+from repro.data.pipeline import DatasetRef
+from repro.models import RunConfig, build
+from repro.serving import Engine
+from repro.training.optimizer import AdamW, constant
+from repro.training.train_step import make_train_step
+
+RUN = RunConfig()
+
+# --- 1. train the classifier on the planted-signal IMDb ------------------
+print("== training sentiment classifier ==")
+cfg = configs.smoke("distilbert-imdb")
+model = build(cfg)
+tokens, labels = imdb_reviews(n=512, seq_len=48, vocab=cfg.vocab_size,
+                              signal_frac=0.15)
+params = model.init(jax.random.PRNGKey(0))
+opt = AdamW(schedule=constant(3e-3), weight_decay=0.0)
+opt_state = opt.init(params)
+step = jax.jit(make_train_step(model, RUN, opt))
+loader = TrainLoader(tokens[:384], labels[:384], batch=32)
+for i in range(150):
+    params, opt_state, m = step(params, opt_state, loader.next_batch())
+    if (i + 1) % 30 == 0:
+        print(f"  step {i+1}: loss={float(m['loss']):.4f} "
+              f"acc={float(m['accuracy']):.3f}")
+
+engine = Engine(model, RUN)
+test_tokens, test_labels = tokens[384:], labels[384:]
+acc = float((engine.classify(params, test_tokens) == test_labels).mean())
+print(f"  held-out accuracy: {acc:.3f}")
+
+# --- 2. monolithic vs parallel on REAL inference --------------------------
+print("\n== real serving: monolithic vs parallel (128 held-out items) ==")
+store = ArtifactStore()
+store.put_tree("models/clf", params)
+job = BatchJob("case", DatasetRef("imdb", len(test_tokens), 48,
+                                  cfg.vocab_size), "models/clf", 16)
+chunks = decompose(job)
+lat = LatencyModel(cold_start_s=0.5, per_item_s=None)
+
+
+def mk(i):
+    return ServerlessFunction(i, store, lat, engine=engine,
+                              params_ref="models/clf")
+
+
+data = {"tokens": test_tokens}
+mono = MonolithicRunner(store, MonolithicConfig()).run(job, chunks, mk,
+                                                       data=data)
+par = Orchestrator(store, OrchestratorConfig(max_concurrency=8)).run(
+    job, chunks, mk, data=data)
+preds = merge(store, job, chunks)
+assert (preds == engine.classify(params, test_tokens)).all(), \
+    "parallel decomposition must preserve monolithic semantics"
+print(f"  monolithic {mono.wall_time_s:5.1f}s ${mono.cost_usd:.6f} | "
+      f"parallel {par.wall_time_s:5.1f}s ${par.cost_usd:.6f} | "
+      f"speedup {mono.wall_time_s/par.wall_time_s:.1f}x, semantics exact")
+
+# --- 3. paper-scale calibrated sweep (Fig 2) -------------------------------
+print("\n== paper-scale sweep (25k reviews, calibrated platform) ==")
+cs = CaseStudyConfig()
+print(f"{'bs':>5} {'mono_min':>9} {'mono_$':>8} {'par_min':>8} "
+      f"{'par_$':>8} {'fns':>5} {'reduction':>9}")
+for bs in [50, 100, 250, 500, 1000]:
+    m = run_monolithic(cs, bs)
+    p = run_parallel(cs, bs)
+    print(f"{bs:>5} {m.wall_time_s/60:>9.1f} {m.cost_usd:>8.4f} "
+          f"{p.wall_time_s/60:>8.2f} {p.cost_usd:>8.4f} "
+          f"{p.n_invocations:>5} "
+          f"{100*(1-p.wall_time_s/m.wall_time_s):>8.1f}%")
+print("\npaper claims: >95% time reduction at comparable cost — "
+      "see EXPERIMENTS.md §Fig2 for the full validation")

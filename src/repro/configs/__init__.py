@@ -1,0 +1,2 @@
+"""Architecture configs: one module per assigned arch + the paper's model."""
+from repro.configs.registry import ARCHS, ASSIGNED, get, reduce_for_smoke, smoke  # noqa: F401

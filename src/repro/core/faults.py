@@ -1,0 +1,46 @@
+"""Fault injection: crashes, stragglers, cold-start spikes.
+
+Deterministic given the seed + (chunk_id, attempt) so tests are exactly
+reproducible. The orchestrator consults the injector for every attempt.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    seed: int = 0
+    crash_prob: float = 0.0           # per-attempt crash probability
+    crash_at_frac: float = 0.5        # crash happens this far into the run
+    straggler_prob: float = 0.0       # per-attempt probability
+    straggler_factor: float = 5.0     # duration multiplier when straggling
+    max_crashes: Optional[int] = None  # stop injecting after N crashes
+
+    def __post_init__(self):
+        self._crashes = 0
+
+    def _rng(self, chunk_id: int, attempt: int) -> np.random.Generator:
+        return np.random.default_rng(
+            (self.seed * 1_000_003 + chunk_id * 101 + attempt) % 2**63)
+
+    def perturb(self, chunk_id: int, attempt: int,
+                duration_s: float) -> Tuple[float, bool]:
+        """Returns (possibly inflated/truncated duration, crashed)."""
+        rng = self._rng(chunk_id, attempt)
+        crashed = False
+        if self.straggler_prob and rng.random() < self.straggler_prob:
+            duration_s *= self.straggler_factor
+        if (self.crash_prob and rng.random() < self.crash_prob
+                and (self.max_crashes is None
+                     or self._crashes < self.max_crashes)):
+            crashed = True
+            self._crashes += 1
+            duration_s *= self.crash_at_frac  # work lost at crash point
+        return duration_s, crashed
+
+
+NO_FAULTS = FaultInjector()

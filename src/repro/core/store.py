@@ -1,0 +1,111 @@
+"""ArtifactStore — the EFS analogue: shared model/dataset/result storage.
+
+Content lives in memory (optionally spilled to disk); every read/write is
+metered so the latency/cost models can charge realistic store traffic
+(model cold-load dominates a short function's runtime — exactly the
+paper's motivation for putting the model on EFS rather than in the
+deployment package).
+
+Result commits are idempotent per key — the orchestrator's exactly-once
+merge builds on this.
+"""
+from __future__ import annotations
+
+import io
+import os
+import pickle
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+class ArtifactStore:
+    def __init__(self, root: Optional[str] = None,
+                 read_bandwidth_mbps: float = 300.0,
+                 write_bandwidth_mbps: float = 100.0):
+        self._mem: Dict[str, bytes] = {}
+        self._root = root
+        self._lock = threading.Lock()
+        self.read_bandwidth_mbps = read_bandwidth_mbps
+        self.write_bandwidth_mbps = write_bandwidth_mbps
+        self.bytes_read = 0
+        self.bytes_written = 0
+        self.n_reads = 0
+        self.n_writes = 0
+        if root:
+            os.makedirs(root, exist_ok=True)
+
+    # -- raw bytes -------------------------------------------------------
+    def put(self, key: str, blob: bytes, *, overwrite: bool = True) -> bool:
+        with self._lock:
+            if not overwrite and key in self._mem:
+                return False  # idempotent commit: first writer wins
+            self._mem[key] = blob
+            self.bytes_written += len(blob)
+            self.n_writes += 1
+            if self._root:
+                path = os.path.join(self._root, key.replace("/", "__"))
+                tmp = path + ".tmp"
+                with open(tmp, "wb") as f:
+                    f.write(blob)
+                os.replace(tmp, path)
+            return True
+
+    def get(self, key: str) -> bytes:
+        with self._lock:
+            if key in self._mem:
+                blob = self._mem[key]
+            elif self._root:
+                path = os.path.join(self._root, key.replace("/", "__"))
+                with open(path, "rb") as f:
+                    blob = f.read()
+                self._mem[key] = blob
+            else:
+                raise KeyError(key)
+            self.bytes_read += len(blob)
+            self.n_reads += 1
+            return blob
+
+    def exists(self, key: str) -> bool:
+        with self._lock:
+            if key in self._mem:
+                return True
+        if self._root:
+            return os.path.exists(
+                os.path.join(self._root, key.replace("/", "__")))
+        return False
+
+    def size(self, key: str) -> int:
+        return len(self.get(key))
+
+    # -- pytrees / arrays --------------------------------------------------
+    # NOTE: np.savez can't round-trip bfloat16 (ml_dtypes); leaves are
+    # stored as raw bytes + (dtype, shape) manifest instead.
+    def put_tree(self, key: str, tree: Any, *, overwrite: bool = True) -> bool:
+        leaves, treedef = jax.tree.flatten(tree)
+        recs = []
+        for x in leaves:
+            arr = np.asarray(x)
+            recs.append({"dtype": str(arr.dtype), "shape": arr.shape,
+                         "data": arr.tobytes()})
+        blob = pickle.dumps({"treedef": treedef, "leaves": recs})
+        return self.put(key, blob, overwrite=overwrite)
+
+    def get_tree(self, key: str) -> Any:
+        import ml_dtypes  # noqa: F401  (registers bfloat16 etc.)
+        obj = pickle.loads(self.get(key))
+        leaves = [
+            np.frombuffer(r["data"], dtype=np.dtype(r["dtype"]))
+            .reshape(r["shape"]).copy()
+            for r in obj["leaves"]
+        ]
+        return jax.tree.unflatten(obj["treedef"], leaves)
+
+    # -- timing model ------------------------------------------------------
+    def read_time_s(self, n_bytes: int) -> float:
+        return n_bytes / (self.read_bandwidth_mbps * 1e6)
+
+    def write_time_s(self, n_bytes: int) -> float:
+        return n_bytes / (self.write_bandwidth_mbps * 1e6)

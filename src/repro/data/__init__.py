@@ -1,0 +1,3 @@
+"""Data substrate: synthetic datasets + resumable pipelines."""
+from repro.data.pipeline import DatasetRef, TrainLoader, chunk_ranges  # noqa: F401
+from repro.data.synthetic import imdb_reviews, lm_batches, lm_tokens  # noqa: F401

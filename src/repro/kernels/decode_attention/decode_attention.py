@@ -1,0 +1,128 @@
+"""Flash-decode Pallas TPU kernel: one query token vs a long KV cache.
+
+Design:
+  * grid = (batch, kv_heads, nT): the KV sequence is split into
+    ``block_t``-sized VMEM tiles; the trailing axis is sequential and the
+    (m, l, acc) online-softmax state lives in VMEM scratch across tiles.
+  * All ``group = H/KV`` query heads of one kv head are processed together
+    as the rows of a (group, D) matmul — on the MXU this turns GQA grouping
+    into free row-parallelism instead of repeated KV reads.
+  * ``length`` arrives via PrefetchScalarGridSpec so the index map and the
+    in-kernel mask both see it; tiles strictly past ``length`` are skipped
+    by clamping the index map (they re-read the last valid tile and are
+    fully masked — no HBM traffic growth).
+
+The same (m, l, acc) merge math is reused one level up by
+``dist.collectives.seq_sharded_decode`` to combine per-chip partials of a
+sequence-sharded cache — kernel intra-chip, psum-merge inter-chip.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, block_t: int, n_t: int, group: int,
+            window: Optional[int], softcap: Optional[float]):
+    ti = pl.program_id(2)
+    length = len_ref[0]
+
+    @pl.when(ti == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)  # (group, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (block_t, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    cols = ti * block_t + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (group, block_t), 1)
+    mask = cols <= length
+    if window is not None:
+        mask &= cols > length - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.where(m_prev > NEG_INF / 2, jnp.exp(m_prev - m_new), 0.0)
+    p = jnp.where(m_new > NEG_INF / 2, jnp.exp(s - m_new), 0.0)
+
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ti == n_t - 1)
+    def _done():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, :, 0, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "block_t", "interpret"))
+def decode_attention_kernel(q, k_cache, v_cache, length, *,
+                            window: Optional[int] = None,
+                            softcap: Optional[float] = None,
+                            block_t: int = 512, interpret: bool = False):
+    """q: (B,H,D); caches: (B,T,KV,D), T % block_t == 0; length: () int32."""
+    b, h, d = q.shape
+    t, kv = k_cache.shape[1], k_cache.shape[2]
+    group = h // kv
+    n_t = t // block_t
+    scale = 1.0 / (d ** 0.5)
+
+    # view q as (B, KV, group, D) so one program owns one kv head's group
+    qg = q.reshape(b, kv, group, d).transpose(0, 2, 1, 3)  # (B, group, KV, D)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, block_t=block_t, n_t=n_t, group=group,
+        window=window, softcap=softcap)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kv, n_t),
+        in_specs=[
+            pl.BlockSpec((1, group, 1, d),
+                         lambda bi, ki, ti, lens: (bi, 0, ki, 0)),
+            pl.BlockSpec((1, block_t, 1, d),
+                         lambda bi, ki, ti, lens: (bi, ti, ki, 0)),
+            pl.BlockSpec((1, block_t, 1, d),
+                         lambda bi, ki, ti, lens: (bi, ti, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, 1, d),
+                               lambda bi, ki, ti, lens: (bi, 0, ki, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, group, kv, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="decode_attention",
+    )(jnp.asarray(length, jnp.int32)[None], qg, k_cache, v_cache)
+    return out.transpose(0, 2, 1, 3).reshape(b, h, d)

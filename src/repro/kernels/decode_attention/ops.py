@@ -1,0 +1,36 @@
+"""jit'd public wrapper for the flash-decode kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import \
+    decode_attention_kernel
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def decode_attention(q, k_cache, v_cache, length, *,
+                     window: Optional[int] = None,
+                     softcap: Optional[float] = None,
+                     block_t: int = 512,
+                     interpret: Optional[bool] = None):
+    """q: (B,H,D); caches: (B,T,KV,D); length: () int32. Returns (B,H,D)."""
+    b, h, d = q.shape
+    t = k_cache.shape[1]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if t < 64:
+        return decode_attention_ref(q, k_cache, v_cache, length,
+                                    window=window, softcap=softcap)
+    block_t = min(block_t, t)
+    pad = (-t) % block_t
+    if pad:
+        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k_cache = jnp.pad(k_cache, widths)
+        v_cache = jnp.pad(v_cache, widths)
+        # padded tail is masked in-kernel via `length` (< t always)
+    return decode_attention_kernel(
+        q, k_cache, v_cache, length, window=window, softcap=softcap,
+        block_t=block_t, interpret=interpret)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the decode-attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, length, *,
+                         window: Optional[int] = None,
+                         softcap: Optional[float] = None):
+    """q: (B,H,D); caches: (B,T,KV,D); length: int32 scalar (current index).
+
+    Attends kv positions j <= length (and j > length - window if windowed).
+    Returns (B,H,D).
+    """
+    b, h, d = q.shape
+    t, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg,
+                        k_cache.astype(jnp.float32)) / (d ** 0.5)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    pos = jnp.arange(t)
+    mask = pos <= length
+    if window is not None:
+        mask &= pos > length - window
+    logits = jnp.where(mask[None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, h, d).astype(q.dtype)

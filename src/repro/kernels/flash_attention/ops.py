@@ -1,0 +1,53 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Handles padding to block multiples, GQA validation, dtype guards, and an
+XLA fallback (the ref oracle) for shapes where a fused kernel cannot help
+(tiny sequences) or when running on non-TPU backends without interpret mode.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _pad_to(x, axis: int, mult: int):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None):
+    """Public entry. q: (B,S,H,D); k,v: (B,T,KV,D); returns (B,S,H,D)."""
+    b, s, h, d = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    if h % kv:
+        raise ValueError(f"q heads {h} not a multiple of kv heads {kv}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if s < 16 or t < 16:  # fused kernel pointless; use the oracle
+        return flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=softcap)
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    qp, pad_q = _pad_to(q, 1, block_q)
+    kp, _ = _pad_to(k, 1, block_k)
+    vp, _ = _pad_to(v, 1, block_k)
+    out = flash_attention_kernel(
+        qp, kp, vp, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+        t_valid=t)
+    if pad_q:
+        out = out[:, :s]
+    return out

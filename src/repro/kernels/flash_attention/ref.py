@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash-attention kernel (no pallas)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None):
+    """q: (B,S,H,D); k,v: (B,T,KV,D) with H % KV == 0. Returns (B,S,H,D)."""
+    b, s, h, d = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg,
+                        k.astype(jnp.float32)) / (d ** 0.5)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return o.reshape(b, s, h, d).astype(q.dtype)

@@ -1,0 +1,2 @@
+"""Launch layer: mesh construction, dry-run driver, train/serve drivers."""
+from repro.launch.mesh import make_host_mesh, make_production_mesh, n_chips  # noqa: F401

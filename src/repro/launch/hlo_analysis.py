@@ -1,0 +1,382 @@
+"""While-aware HLO analyzer: scan-correct FLOPs, HBM bytes, collective bytes.
+
+Why this exists (measured on this container, jax 0.8.2):
+``compiled.cost_analysis()`` reports per-device numbers and counts a
+``lax.scan`` body ONCE, not × trip-count — useless for 96-layer models
+lowered as scans. This parser walks the post-optimization HLO text of the
+(per-partition) module with a multiplier that while-loops scale by their
+trip count (XLA's ``backend_config known_trip_count``, with a
+condition-constant fallback), giving:
+
+  * dot FLOPs (2·prod(result)·prod(contracting)) — scan-exact,
+  * HBM traffic at fusion boundaries, with slice-aware corrections:
+    dynamic-slice reads the slice (not the full stacked scan weights),
+    dynamic-update-slice writes the update (not the whole KV cache),
+    gather reads the rows (not the whole embedding table),
+  * per-type collective bytes with ring-model effective factors
+    (all-reduce 2×, all-gather/reduce-scatter/all-to-all ≈1×,
+    collective-permute 1×).
+
+All numbers are PER-DEVICE (the compiled module is the SPMD program of one
+partition), which is exactly what the per-chip roofline terms need.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\((.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPNAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string (tuples summed)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def shape_elems(shape_str: str) -> int:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return 1
+    n = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    rest: str
+
+    def operands(self) -> List[str]:
+        """Operand %names (before the closing paren of the operand list)."""
+        depth, end = 1, len(self.rest)
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        return _OPNAME_RE.findall(self.rest[:end])
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    is_fusion_body: bool = False
+
+    def shapes(self) -> Dict[str, str]:
+        return {i.name: i.shape for i in self.instrs}
+
+
+@dataclasses.dataclass
+class Analysis:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_instances: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    while_trips: Dict[str, int] = dataclasses.field(default_factory=dict)
+    n_dots: int = 0
+    hbm_top: List[Tuple[float, str, str]] = dataclasses.field(
+        default_factory=list)  # (bytes×mult, opcode, op_name meta)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "partition-id", "replica-id",
+               "while", "conditional", "call", "custom-call", "fusion",
+               "dynamic-slice", "dynamic-update-slice", "gather",
+               # TPU-faithfulness: XLA-CPU's float-normalization pass
+               # materializes fp32 copies of bf16 tensors around dots
+               # (whole KV caches / weight stacks). On the TPU target,
+               # bf16 feeds the MXU directly and dtype converts fuse —
+               # counting them would overstate the memory term 2-20×
+               # (measured on command-r decode_32k, §Perf iteration 6).
+               "convert", "bitcast-convert"}
+
+_CONVERT_ONLY = {"parameter", "convert", "bitcast", "bitcast-convert",
+                 "copy", "tuple", "get-tuple-element"}
+
+
+def parse_computations(hlo_text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for line in hlo_text.splitlines():
+        if cur is None:
+            if (line and not line[0].isspace() and line.rstrip().endswith("{")
+                    and "->" in line):
+                is_entry = line.startswith("ENTRY")
+                name = line.split()[1 if is_entry else 0].lstrip("%")
+                name = name.split("(")[0].rstrip()
+                cur = Computation(name=name, instrs=[])
+                if is_entry:
+                    entry_name = name
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            cur.instrs.append(Instr(name=m.group(1), shape=m.group(2),
+                                    opcode=m.group(3), rest=m.group(4)))
+    if entry_name:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _called_comps(rest: str) -> List[str]:
+    names = []
+    for attr in ("calls=", "to_apply=", "body=", "condition="):
+        for m in re.finditer(re.escape(attr) + r"%?([\w.\-]+)", rest):
+            names.append(m.group(1))
+    m = re.search(r"branch_computations=\{([^}]*)\}", rest)
+    if m:
+        names += [s.strip().lstrip("%") for s in m.group(1).split(",")]
+    return names
+
+
+def _while_trip(comps: Dict[str, Computation], ins: Instr,
+                default: int) -> Tuple[int, str, str]:
+    body = cond = ""
+    mb = re.search(r"body=%?([\w.\-]+)", ins.rest)
+    mc = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+    if mb:
+        body = mb.group(1)
+    if mc:
+        cond = mc.group(1)
+    mt = _TRIP_RE.search(ins.rest)
+    if mt:
+        return int(mt.group(1)), body, cond
+
+    # fallback: largest positive int constant reachable from the condition
+    def consts_of(cname, depth=0) -> List[int]:
+        if cname not in comps or depth > 3:
+            return []
+        vals = []
+        for i in comps[cname].instrs:
+            if i.opcode == "constant" and re.match(r"[su]\d+\[\]", i.shape):
+                m = re.match(r"(-?\d+)", i.rest)
+                if m:
+                    vals.append(int(m.group(1)))
+            if i.opcode == "fusion":
+                for sub in _called_comps(i.rest):
+                    vals += consts_of(sub, depth + 1)
+        return vals
+    pos = [c for c in consts_of(cond) if c > 0]
+    return (max(pos) if pos else default), body, cond
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    result_elems = shape_elems(ins.shape)
+    shapes = comp.shapes()
+    ops = ins.operands()
+    lhs_shape = shapes.get(ops[0]) if ops else None
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    contract = 1
+    if m and lhs_shape:
+        dm = _SHAPE_RE.search(lhs_shape)
+        if dm and dm.group(2):
+            lhs_dims = [int(d) for d in dm.group(2).split(",") if d]
+            for ci in m.group(1).split(","):
+                if ci:
+                    contract *= lhs_dims[int(ci)]
+    return 2.0 * result_elems * contract
+
+
+def _slice_aware_read_bytes(comps: Dict[str, Computation], comp: Computation,
+                            ins: Instr) -> float:
+    """Read bytes of one instruction with DS/gather corrections."""
+    shapes = comp.shapes()
+    ops = ins.operands()
+    if ins.opcode == "dynamic-slice":
+        return shape_bytes(ins.shape)  # reads the slice, not the buffer
+    if ins.opcode == "gather":
+        return shape_bytes(ins.shape) + sum(
+            shape_bytes(shapes.get(o, "")) for o in ops[1:])
+    if ins.opcode == "dynamic-update-slice":
+        # aliased in-place: reads+writes the update region only
+        upd = shapes.get(ops[1], "") if len(ops) > 1 else ""
+        return shape_bytes(upd)
+    if ins.opcode == "fusion":
+        body_name = next(iter(_called_comps(ins.rest)), None)
+        body = comps.get(body_name)
+        if body is None:
+            return sum(shape_bytes(shapes.get(o, "")) for o in ops)
+        if all(i.opcode in _CONVERT_ONLY for i in body.instrs):
+            return 0.0  # pure dtype-convert fusion: free on the TPU target
+        # map fusion params to caller operands; correct sliced params.
+        # resolve through unary passthroughs (convert/bitcast/copy/reshape)
+        # so e.g. param -> convert -> dynamic-update-slice still matches.
+        params = [i for i in body.instrs if i.opcode == "parameter"]
+        bshapes = body.shapes()
+        passthrough = {}
+        for bi in body.instrs:
+            bops = bi.operands()
+            if bi.opcode in ("convert", "bitcast", "copy", "reshape",
+                             "bitcast-convert") and bops:
+                passthrough[bi.name] = bops[0]
+
+        def resolve(name, depth=0):
+            while name in passthrough and depth < 8:
+                name = passthrough[name]
+                depth += 1
+            return name
+
+        sliced: Dict[str, float] = {}
+        dus_targets: set = set()
+        for bi in body.instrs:
+            bops = [resolve(o) for o in bi.operands()]
+            if bi.opcode == "dynamic-slice" and bops:
+                sliced[bops[0]] = sliced.get(bops[0], 0.0) \
+                    + shape_bytes(bi.shape)
+            if bi.opcode == "gather" and bops:
+                sliced[bops[0]] = sliced.get(bops[0], 0.0) \
+                    + shape_bytes(bi.shape)
+            if bi.opcode == "dynamic-update-slice" and bops:
+                dus_targets.add(bops[0])
+                if len(bops) > 1:
+                    sliced[bops[0]] = sliced.get(bops[0], 0.0) \
+                        + shape_bytes(bshapes.get(bops[1], ""))
+        total = 0.0
+        for p in params:
+            full = shape_bytes(p.shape)
+            total += min(sliced[p.name], full) if p.name in sliced else full
+        # result write: DUS-rooted fusions write the update region only
+        root = body.instrs[-1] if body.instrs else None
+        if root is not None and (root.opcode == "dynamic-update-slice"
+                                 or dus_targets):
+            ups = [v for v in sliced.values()]
+            total += min(sum(ups), shape_bytes(ins.shape)) \
+                if ups else shape_bytes(ins.shape)
+        else:
+            total += shape_bytes(ins.shape)
+        return total
+    return sum(shape_bytes(shapes.get(o, "")) for o in ops)
+
+
+def analyze_hlo(hlo_text: str, *, default_trip: int = 1,
+                trip_overrides: Optional[Dict[str, int]] = None) -> Analysis:
+    comps = parse_computations(hlo_text)
+    if "__entry__" not in comps:
+        raise ValueError("no ENTRY computation found in HLO text")
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.opcode == "fusion":
+                for name in _called_comps(ins.rest):
+                    if name in comps:
+                        comps[name].is_fusion_body = True
+
+    out = Analysis()
+    trip_overrides = trip_overrides or {}
+
+    def walk(comp: Computation, mult: float, count_bytes: bool,
+             depth: int = 0):
+        if depth > 32:
+            return
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "dot":
+                out.flops += _dot_flops(comp, ins) * mult
+                out.n_dots += 1
+            if count_bytes:
+                base = op.replace("-start", "")
+                if base in COLLECTIVES:
+                    shapes = comp.shapes()
+                    op_bytes = sum(shape_bytes(shapes.get(o, ""))
+                                   for o in ins.operands())
+                    nbytes = max(shape_bytes(ins.shape), op_bytes)
+                    factor = 2.0 if base == "all-reduce" else 1.0
+                    out.collective_bytes[base] += factor * nbytes * mult
+                    out.collective_instances[base] += 1
+                # CPU float-normalization debris: copies/transposes/fusions
+                # materializing fp32 views of bf16 tensors. Native-bf16 on
+                # the TPU target — excluded from the memory term.
+                norm_debris = (op in ("copy", "transpose", "fusion")
+                               and 'convert_element_type"' in ins.rest)
+                if op == "copy" and ins.shape.startswith("f32"):
+                    # f32 copy with a bf16 twin of identical dims in the
+                    # same computation = CPU float-normalization double
+                    # buffer; native bf16 on TPU (no twin -> real copy).
+                    dims = ins.shape.split("[", 1)[-1].split("]")[0]
+                    twin = f"bf16[{dims}]"
+                    if any(i.shape.startswith(twin) for i in comp.instrs):
+                        norm_debris = True
+                contrib = 0.0
+                if norm_debris:
+                    pass
+                elif op in ("fusion", "dynamic-slice",
+                            "dynamic-update-slice", "gather"):
+                    contrib = _slice_aware_read_bytes(
+                        comps, comp, ins) * mult
+                    if op != "fusion":
+                        contrib += shape_bytes(ins.shape) * mult \
+                            if op != "dynamic-update-slice" else 0.0
+                elif op not in _SKIP_BYTES and not op.endswith("-done"):
+                    shapes = comp.shapes()
+                    op_bytes = sum(shape_bytes(shapes.get(o, ""))
+                                   for o in ins.operands())
+                    contrib = (shape_bytes(ins.shape) + op_bytes) * mult
+                if contrib:
+                    out.hbm_bytes += contrib
+                    meta = re.search(r'op_name="([^"]+)"', ins.rest)
+                    out.hbm_top.append(
+                        (contrib, op, (meta.group(1) if meta else "")[-90:]))
+
+            if op == "while":
+                trip, body, cond = _while_trip(comps, ins, default_trip)
+                trip = trip_overrides.get(ins.name, trip)
+                out.while_trips[ins.name] = trip
+                if body in comps:
+                    walk(comps[body], mult * trip, count_bytes, depth + 1)
+                if cond in comps:
+                    walk(comps[cond], mult * trip, False, depth + 1)
+            elif op == "fusion":
+                for name in _called_comps(ins.rest):
+                    if name in comps:
+                        walk(comps[name], mult, False, depth + 1)
+            elif op in ("call", "conditional"):
+                for name in _called_comps(ins.rest):
+                    if name in comps and name != comp.name:
+                        walk(comps[name], mult, count_bytes, depth + 1)
+
+    walk(comps["__entry__"], 1.0, True)
+    return out

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A function, not a module-level constant, so importing this module never
+touches jax device state. Dry-runs set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import (see dryrun.py) so 512 host placeholder devices are available.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=(2, 4), axes=("data", "model")) -> jax.sharding.Mesh:
+    """Small mesh over whatever host devices exist (tests/examples)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def n_chips(mesh: jax.sharding.Mesh) -> int:
+    return mesh.devices.size

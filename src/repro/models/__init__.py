@@ -1,0 +1,5 @@
+"""Model substrate: unified LM / MoE / SSM / enc-dec in pure functional JAX."""
+from repro.models.common import (AxSpec, LayerSpec, ModelConfig, MoEConfig,  # noqa: F401
+                                 RunConfig, SSMConfig, abstract_params,
+                                 init_params, param_bytes, param_count)
+from repro.models.model_zoo import SHAPES, Model, SkipCell, build, shape_applicable  # noqa: F401

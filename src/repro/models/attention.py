@@ -1,0 +1,264 @@
+"""GQA attention: full-sequence (train/prefill) and single-token decode paths.
+
+Supports: grouped-query attention, causal / bidirectional / sliding-window
+masks, logit softcapping (Gemma-2), QKV / output biases (Qwen-2, Whisper),
+RoPE or external positions, and cross-attention (encoder-decoder).
+
+``impl`` dispatch:
+  * "xla"       — pure jnp einsum path (reference; what the dry-run lowers)
+  * "pallas"    — fused Pallas TPU kernels (kernels/flash_attention, decode)
+  * "seq_shard" — decode over a sequence-sharded KV cache via shard_map
+                  (dist.collectives.seq_sharded_decode)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import context as dctx
+from repro.models.common import AxSpec, ModelConfig, apply_rope, softcap
+
+NEG_INF = -1e30
+
+
+def _constrain_heads_or_seq(x):
+    """(B,S,H,hd): shard heads over "model" when divisible, else fall back
+    to sequence parallelism (shard S) so attention compute still
+    partitions (e.g. qwen2's 28 heads on a 16-wide model axis)."""
+    h = x.shape[2]
+    msize = dctx.axis_size("model")
+    if msize > 1 and h % msize == 0:
+        return dctx.constrain(x, None, "model", None)
+    return dctx.constrain(x, "model", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def attn_specs(cfg: ModelConfig, *, cross: bool = False, d_in: Optional[int] = None):
+    d = d_in or cfg.d_model
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": AxSpec((d, h, hd), ("d_model", "heads", "head_dim")),
+        "wk": AxSpec((d, kv, hd), ("d_model", "kv_heads", "head_dim")),
+        "wv": AxSpec((d, kv, hd), ("d_model", "kv_heads", "head_dim")),
+        "wo": AxSpec((h, hd, d), ("heads", "head_dim", "d_model")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = AxSpec((h, hd), ("heads", "head_dim"), "zeros")
+        p["bk"] = AxSpec((kv, hd), ("kv_heads", "head_dim"), "zeros")
+        p["bv"] = AxSpec((kv, hd), ("kv_heads", "head_dim"), "zeros")
+    if cfg.attn_out_bias:
+        p["bo"] = AxSpec((d,), ("d_model",), "zeros")
+    if cross:
+        # cross-attention keys/values come from the encoder stream
+        p["wk"] = AxSpec((cfg.enc_d_model or d, kv, hd),
+                         ("d_model", "kv_heads", "head_dim"))
+        p["wv"] = AxSpec((cfg.enc_d_model or d, kv, hd),
+                         ("d_model", "kv_heads", "head_dim"))
+    return p
+
+
+def project_qkv(cfg: ModelConfig, p, x, kv_x=None):
+    """x: (B,S,D) -> q (B,S,H,hd), k/v (B,T,KV,hd)."""
+    kv_x = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", kv_x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", kv_x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    return q, k, v
+
+
+def out_proj(p, o):
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+    if "bo" in p:
+        y = y + p["bo"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (XLA reference path)
+# ---------------------------------------------------------------------------
+
+
+def _mask_full(sq: int, st: int, mask_kind: str, window: Optional[int],
+               q_offset=0):
+    """(sq, st) boolean mask. q position i attends kv position j."""
+    qi = jnp.arange(sq)[:, None] + q_offset
+    kj = jnp.arange(st)[None, :]
+    if mask_kind == "bidir":
+        m = jnp.ones((sq, st), bool)
+    else:
+        m = kj <= qi
+    if window is not None:
+        m = m & (kj > qi - window)
+    return m
+
+
+def _attend_dense(q, k, v, *, mask_kind, window, cap, q_offset=0):
+    """Unfused reference attention for one q block vs full k/v."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+    scale = 1.0 / (hd ** 0.5)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = softcap(logits, cap)
+    mask = _mask_full(sq, k.shape[1], mask_kind, window, q_offset)
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+Q_CHUNK = 1024  # q-block size for the memory-bounded XLA path
+
+
+def attend_full(q, k, v, *, mask_kind: str = "causal",
+                window: Optional[int] = None, cap: Optional[float] = None,
+                impl: str = "xla"):
+    """q: (B,S,H,hd); k,v: (B,T,KV,hd). GQA-aware; returns (B,S,H,hd).
+
+    The XLA path chunks the query dimension (scan over Q_CHUNK blocks) so
+    logits never materialize at (S,T) — the memory-efficient-attention
+    fallback for when the Pallas flash kernel isn't available (CPU
+    dry-runs). Long-sequence cells are impossible without this.
+    """
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(
+            q, k, v, causal=(mask_kind == "causal"), window=window,
+            softcap=cap)
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    if s <= 2 * Q_CHUNK or s % Q_CHUNK:
+        return _attend_dense(q, k, v, mask_kind=mask_kind, window=window,
+                             cap=cap)
+    nc = s // Q_CHUNK
+    qc = jnp.moveaxis(q.reshape(b, nc, Q_CHUNK, h, hd), 1, 0)
+    offsets = jnp.arange(nc) * Q_CHUNK
+
+    def body(_, xs):
+        qi, off = xs
+        qi = _constrain_heads_or_seq(qi)
+        o = _attend_dense(qi, k, v, mask_kind=mask_kind, window=window,
+                          cap=cap, q_offset=off)
+        return None, _constrain_heads_or_seq(o)
+
+    _, oc = jax.lax.scan(body, None, (qc, offsets))
+    return jnp.moveaxis(oc, 0, 1).reshape(b, s, h, hd)
+
+
+def attend_decode(q, k_cache, v_cache, length, *,
+                  window: Optional[int] = None, cap: Optional[float] = None,
+                  impl: str = "xla"):
+    """Single-token decode. q: (B,1,H,hd); caches: (B,Smax,KV,hd).
+
+    ``length`` (int32 scalar) = index of the current token; attends to
+    kv positions j <= length (the new token's k/v must already be written).
+    """
+    if impl == "seq_shard":
+        from repro.dist import collectives
+        return collectives.seq_sharded_decode(
+            q, k_cache, v_cache, length, window=window, cap=cap)
+    if impl == "pallas":
+        from repro.kernels.decode_attention import ops as da_ops
+        return da_ops.decode_attention(
+            q[:, 0], k_cache, v_cache, length, window=window, softcap=cap
+        )[:, None]
+    b, _, h, hd = q.shape
+    kvh = k_cache.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd)
+    scale = 1.0 / (hd ** 0.5)
+    logits = jnp.einsum("bkgh,btkh->bkgt", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    logits = softcap(logits, cap)
+    t = jnp.arange(k_cache.shape[1])
+    mask = t <= length
+    if window is not None:
+        mask = mask & (t > length - window)
+    logits = jnp.where(mask[None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgt,btkh->bkgh", probs, v_cache.astype(jnp.float32))
+    return o.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Layer-level wrappers used by the transformer block
+# ---------------------------------------------------------------------------
+
+
+def attn_forward(cfg: ModelConfig, p, x, *, mixer: str, positions,
+                 impl: str = "xla", mask_kind: str = "causal",
+                 return_kv: bool = False):
+    """Full-sequence attention sublayer (no residual/norm — block handles)."""
+    q, k, v = project_qkv(cfg, p, x)
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = _constrain_heads_or_seq(q)
+    k = dctx.constrain(k, None, "model", None)  # kv heads when divisible
+    v = dctx.constrain(v, None, "model", None)
+    window = cfg.window if mixer == "attn_local" else None
+    o = attend_full(q, k, v, mask_kind=mask_kind, window=window,
+                    cap=cfg.attn_softcap, impl=impl)
+    y = dctx.constrain(out_proj(p, o), None, None)
+    return (y, (k, v)) if return_kv else y
+
+
+def attn_decode_layer(cfg: ModelConfig, p, x, k_cache, v_cache, length, *,
+                      mixer: str, impl: str = "xla"):
+    """Decode sublayer: project, write new kv at ``length``, attend.
+
+    Returns (y, new_k_cache, new_v_cache).
+    """
+    q, k, v = project_qkv(cfg, p, x)  # q,k,v: (B,1,·,hd)
+    if cfg.pos == "rope":
+        pos = jnp.asarray(length)[None, None]  # (1,1) broadcast over batch
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    window = cfg.window if mixer == "attn_local" else None
+    if impl == "seq_shard":
+        # fused write+attend over the sequence-sharded cache (shard_map):
+        # the write must happen shard-locally or SPMD gathers the cache.
+        from repro.dist import collectives
+        o, k_cache, v_cache = collectives.seq_sharded_write_decode(
+            q, k, v, k_cache, v_cache, length, window=window,
+            cap=cfg.attn_softcap)
+        return out_proj(p, o), k_cache, v_cache
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), length, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), length, axis=1)
+    o = attend_decode(q, k_cache, v_cache, length, window=window,
+                      cap=cfg.attn_softcap, impl=impl)
+    return out_proj(p, o), k_cache, v_cache
+
+
+def cross_attn_forward(cfg: ModelConfig, p, x, enc_k, enc_v, *,
+                       impl: str = "xla"):
+    """Decoder cross-attention against precomputed encoder K/V."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+    o = attend_full(q, enc_k, enc_v, mask_kind="bidir", cap=cfg.attn_softcap,
+                    impl="xla" if impl == "seq_shard" else impl)
+    return out_proj(p, o)
+
+
+def cross_kv(cfg: ModelConfig, p, enc_out):
+    k = jnp.einsum("btd,dhk->bthk", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("btd,dhk->bthk", enc_out, p["wv"].astype(enc_out.dtype))
+    if "bk" in p:
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    return k, v

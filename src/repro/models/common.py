@@ -1,0 +1,306 @@
+"""Shared model primitives: configs, param descriptors, norms, RoPE, activations.
+
+Everything is pure-functional JAX. Parameters are described by ``AxSpec``
+descriptor trees (shape + logical axis names + init), which lets the same tree be
+
+  * materialized (``init_params``)                — real training/serving,
+  * abstracted  (``abstract_params``)             — zero-allocation dry-runs,
+  * partitioned (``dist.sharding.specs_for``)     — logical axes -> PartitionSpec.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Param descriptors
+# ---------------------------------------------------------------------------
+
+
+class AxSpec(NamedTuple):
+    """Descriptor for a single parameter tensor.
+
+    ``axes`` holds one *logical* axis name per dim (e.g. "d_model", "heads",
+    "layers"); the sharding planner maps logical names to mesh axes.
+    """
+
+    shape: tuple
+    axes: tuple
+    init: str = "normal"  # normal | zeros | ones | embed | small
+    dtype: Any = jnp.bfloat16
+    scale: Optional[float] = None  # stddev override for "normal"
+
+
+def is_axspec(x) -> bool:
+    return isinstance(x, AxSpec)
+
+
+def tree_map_spec(fn: Callable[[AxSpec], Any], tree):
+    return jax.tree.map(fn, tree, is_leaf=is_axspec)
+
+
+def abstract_params(spec_tree):
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    return tree_map_spec(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree)
+
+
+def param_count(spec_tree) -> int:
+    leaves = [s for s in jax.tree.leaves(spec_tree, is_leaf=is_axspec)]
+    return sum(int(math.prod(s.shape)) for s in leaves)
+
+
+def param_bytes(spec_tree) -> int:
+    leaves = [s for s in jax.tree.leaves(spec_tree, is_leaf=is_axspec)]
+    return sum(int(math.prod(s.shape)) * jnp.dtype(s.dtype).itemsize for s in leaves)
+
+
+def init_params(key, spec_tree):
+    """Materialize a descriptor tree into real arrays (used at small scale)."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_axspec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    def one(k, s: AxSpec):
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, s.dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, s.dtype)
+        fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+        std = s.scale if s.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+        if s.init == "embed":
+            std = s.scale if s.scale is not None else 0.02
+        if s.init == "small":
+            std = 0.006
+        return (jax.random.normal(k, s.shape, jnp.float32) * std).astype(s.dtype)
+
+    return jax.tree.unflatten(treedef, [one(k, s) for k, s in zip(keys, leaves)])
+
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+
+class LayerSpec(NamedTuple):
+    mixer: str  # "attn" | "attn_local" | "ssm"
+    mlp: str    # "dense" | "moe" | "none"
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    expert_ff: int
+    num_shared: int = 0
+    shared_ff: int = 0
+    capacity_factor: float = 1.25
+    router_softcap: Optional[float] = None  # grok-style gating cap
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 128
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | encdec | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    pattern: tuple = (LayerSpec("attn", "dense"),)
+    act: str = "silu"
+    gated_mlp: bool = True           # SwiGLU-style; False -> classic 2-matrix MLP
+    qkv_bias: bool = False
+    attn_out_bias: bool = False
+    mlp_bias: bool = False
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    window: Optional[int] = None     # sliding window for "attn_local" layers
+    rope_theta: float = 1e4
+    pos: str = "rope"                # rope | learned | none
+    max_position: int = 524_288 + 8  # learned-pos table size (shape-cell driven)
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    norm_eps: float = 1e-5
+    sandwich_norms: bool = False     # gemma2 pre+post block norms
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    encdec: bool = False
+    n_enc_layers: int = 0
+    enc_d_model: int = 0             # encoder width (whisper: same as d_model)
+    input_mode: str = "tokens"       # tokens | embeddings (stubbed frontends)
+    tie_embeddings: bool = False
+    emb_scale: bool = False          # gemma-style sqrt(d_model) embedding scaling
+    bidirectional: bool = False      # encoder-only models (paper's DistilBERT)
+    num_labels: Optional[int] = None  # classifier head (sentiment case study)
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def period(self) -> int:
+        return len(self.pattern)
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % self.period == 0, (
+            f"{self.name}: n_layers={self.n_layers} not divisible by pattern "
+            f"period {self.period}")
+        return self.n_layers // self.period
+
+    @property
+    def q_per_kv(self) -> int:
+        return max(self.n_heads // max(self.n_kv_heads, 1), 1)
+
+    def has_mixer(self, kind: str) -> bool:
+        return any(s.mixer.startswith(kind) for s in self.pattern)
+
+    @property
+    def attention_free(self) -> bool:
+        return not self.has_mixer("attn")
+
+    @property
+    def subquadratic(self) -> bool:
+        """True if long-context (500k) decode/prefill is architecturally sane."""
+        n_attn = sum(1 for s in self.pattern if s.mixer.startswith("attn"))
+        return n_attn == 0 or (self.family == "hybrid")
+
+    def param_count_analytic(self) -> int:
+        """6·N·D roofline numerator helper: total parameter count."""
+        from repro.models import model_zoo  # local import to avoid cycle
+        return param_count(model_zoo.build(self).param_specs)
+
+    def active_param_count_analytic(self) -> int:
+        from repro.models import model_zoo
+        return model_zoo.build(self).active_param_count
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Runtime knobs orthogonal to the architecture (perf-iteration levers)."""
+
+    attn_impl: str = "xla"        # xla | pallas | seq_shard (decode only)
+    moe_impl: str = "auto"        # auto | einsum | scatter | ragged
+    seq_parallel: bool = False    # Megatron-SP: residual stream sharded
+                                  # along seq over "model" (train/prefill)
+    remat: str = "none"           # none | dots | full
+    microbatch: Optional[int] = None  # grad-accum microbatch size (train)
+    scan_layers: bool = True      # scan over layer groups vs python unroll
+    cache_pad: int = 128          # decode cache slack past prefill length
+    grad_compression: str = "none"  # none | bf16 | int8 (cross-pod all-reduce)
+    donate_cache: bool = True
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+
+def act_fn(name: str) -> Callable:
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=False),
+        "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rms_norm(x, scale, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm_spec(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"scale": AxSpec((d,), ("d_model",), "zeros", jnp.float32)}
+    return {
+        "scale": AxSpec((d,), ("d_model",), "ones", jnp.float32),
+        "bias": AxSpec((d,), ("d_model",), "zeros", jnp.float32),
+    }
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    if cfg.norm == "rmsnorm":
+        return rms_norm(x, p["scale"], cfg.norm_eps)
+    return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, d/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos: int, dim: int):
+    pos = jnp.arange(n_pos, dtype=jnp.float32)[:, None]
+    i = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2 * i / dim)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits, labels, ignore_id: int = -100):
+    """Mean CE over non-ignored tokens; logits (..., V) fp32-accumulated."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(
+        lf, jnp.maximum(labels, 0)[..., None], axis=-1).squeeze(-1)
+    nll = lse - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,224 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment, the conv/mel frontend is a STUB: ``input_specs()`` feeds
+precomputed frame embeddings (B, S_enc, enc_d_model) to the encoder.
+Encoder: bidirectional self-attention, sinusoidal positions, pre-LN.
+Decoder: causal self-attention + cross-attention, learned positions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import mlp as mlp_lib
+from repro.models.common import (AxSpec, ModelConfig, RunConfig,
+                                 apply_norm, norm_spec, sinusoidal_positions,
+                                 tree_map_spec)
+from repro.models.transformer import _stack
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def _enc_layer_specs(cfg: ModelConfig):
+    return {
+        "norm1": norm_spec(cfg),
+        "attn": attn_lib.attn_specs(cfg),
+        "norm2": norm_spec(cfg),
+        "mlp": mlp_lib.mlp_specs(cfg),
+    }
+
+
+def _dec_layer_specs(cfg: ModelConfig):
+    return {
+        "norm1": norm_spec(cfg),
+        "self_attn": attn_lib.attn_specs(cfg),
+        "norm_x": norm_spec(cfg),
+        "cross_attn": attn_lib.attn_specs(cfg, cross=True),
+        "norm2": norm_spec(cfg),
+        "mlp": mlp_lib.mlp_specs(cfg),
+    }
+
+
+def encdec_specs(cfg: ModelConfig):
+    return {
+        "embed": AxSpec((cfg.vocab_size, cfg.d_model), ("vocab", "d_model"),
+                        "embed"),
+        "dec_pos": AxSpec((cfg.max_position, cfg.d_model),
+                          ("vocab", "d_model"), "embed"),
+        "enc_blocks": _stack(_enc_layer_specs(cfg), cfg.n_enc_layers),
+        "dec_blocks": _stack(_dec_layer_specs(cfg), cfg.n_layers),
+        "enc_final_norm": norm_spec(cfg),
+        "final_norm": norm_spec(cfg),
+    }
+    # whisper ties the LM head to the token embedding
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+
+def encode(cfg: ModelConfig, run: RunConfig, params, frame_embeds):
+    """frame_embeds: (B, S_enc, D) — precomputed by the stubbed frontend."""
+    b, s, d = frame_embeds.shape
+    x = frame_embeds.astype(jnp.bfloat16)
+    x = x + sinusoidal_positions(s, d)[None].astype(x.dtype)
+    positions = jnp.arange(s)[None, :]
+
+    def layer(x, p):
+        h = apply_norm(cfg, p["norm1"], x)
+        h = attn_lib.attn_forward(cfg, p["attn"], h, mixer="attn",
+                                  positions=positions, impl=run.attn_impl,
+                                  mask_kind="bidir")
+        x = x + h
+        h = apply_norm(cfg, p["norm2"], x)
+        x = x + mlp_lib.mlp_apply(cfg, p["mlp"], h)
+        return x, None
+
+    x, _ = jax.lax.scan(layer, x, params["enc_blocks"])
+    return apply_norm(cfg, params["enc_final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+
+def _dec_embed(cfg, params, tokens, positions):
+    x = params["embed"].astype(jnp.bfloat16)[tokens]
+    return x + jnp.take(params["dec_pos"], positions, axis=0).astype(x.dtype)
+
+
+def _dec_head(cfg, params, x):
+    return jnp.einsum("...d,vd->...v", x,
+                      params["embed"].astype(x.dtype)).astype(jnp.float32)
+
+
+def dec_forward(cfg: ModelConfig, run: RunConfig, params, tokens, enc_out):
+    """Teacher-forced decoder logits over the full sequence."""
+    s = tokens.shape[1]
+    positions = jnp.arange(s)[None, :]
+    x = _dec_embed(cfg, params, tokens, positions)
+
+    def layer(x, p):
+        h = apply_norm(cfg, p["norm1"], x)
+        h = attn_lib.attn_forward(cfg, p["self_attn"], h, mixer="attn",
+                                  positions=positions, impl=run.attn_impl)
+        x = x + h
+        h = apply_norm(cfg, p["norm_x"], x)
+        ek, ev = attn_lib.cross_kv(cfg, p["cross_attn"], enc_out)
+        x = x + attn_lib.cross_attn_forward(cfg, p["cross_attn"], h, ek, ev,
+                                            impl=run.attn_impl)
+        h = apply_norm(cfg, p["norm2"], x)
+        x = x + mlp_lib.mlp_apply(cfg, p["mlp"], h)
+        return x, None
+
+    x, _ = jax.lax.scan(layer, x, params["dec_blocks"])
+    x = apply_norm(cfg, params["final_norm"], x)
+    return _dec_head(cfg, params, x)
+
+
+def forward(cfg: ModelConfig, run: RunConfig, params, *, enc_embeds, tokens):
+    """Full enc-dec forward for training. Returns (logits, aux=0)."""
+    enc_out = encode(cfg, run, params, enc_embeds)
+    return dec_forward(cfg, run, params, tokens, enc_out), \
+        jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode with self + cross caches
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EncDecCache:
+    self_k: Any   # (L, B, max_len, KV, hd)
+    self_v: Any
+    cross_k: Any  # (L, B, S_enc, KV, hd)
+    cross_v: Any
+    length: Any
+
+    def tree_flatten(self):
+        return ((self.self_k, self.self_v, self.cross_k, self.cross_v,
+                 self.length), None)
+
+    @classmethod
+    def tree_unflatten(cls, _, c):
+        return cls(*c)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, enc_len: int):
+    kvshape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    xshape = (cfg.n_layers, batch, enc_len, cfg.n_kv_heads, cfg.head_dim)
+    f = lambda s: jax.ShapeDtypeStruct(s, jnp.bfloat16)
+    return EncDecCache(f(kvshape), f(kvshape), f(xshape), f(xshape),
+                       jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def prefill(cfg: ModelConfig, run: RunConfig, params, *, enc_embeds, tokens,
+            max_len: Optional[int] = None):
+    """Encode + teacher-forced decoder prefill. Returns (logits_last, cache)."""
+    b, s = tokens.shape
+    max_len = max_len or (s + run.cache_pad)
+    enc_out = encode(cfg, run, params, enc_embeds)
+    positions = jnp.arange(s)[None, :]
+    x = _dec_embed(cfg, params, tokens, positions)
+
+    def layer(x, p):
+        h = apply_norm(cfg, p["norm1"], x)
+        h, (k, v) = attn_lib.attn_forward(
+            cfg, p["self_attn"], h, mixer="attn", positions=positions,
+            impl=run.attn_impl, return_kv=True)
+        x = x + h
+        h = apply_norm(cfg, p["norm_x"], x)
+        ek, ev = attn_lib.cross_kv(cfg, p["cross_attn"], enc_out)
+        x = x + attn_lib.cross_attn_forward(cfg, p["cross_attn"], h, ek, ev,
+                                            impl=run.attn_impl)
+        h = apply_norm(cfg, p["norm2"], x)
+        x = x + mlp_lib.mlp_apply(cfg, p["mlp"], h)
+        pad = [(0, 0), (0, max_len - s), (0, 0), (0, 0)]
+        return x, (jnp.pad(k.astype(jnp.bfloat16), pad),
+                   jnp.pad(v.astype(jnp.bfloat16), pad),
+                   ek.astype(jnp.bfloat16), ev.astype(jnp.bfloat16))
+
+    x, (sk, sv, ck, cv) = jax.lax.scan(layer, x, params["dec_blocks"])
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = _dec_head(cfg, params, x[:, -1])
+    return logits, EncDecCache(sk, sv, ck, cv, jnp.asarray(s, jnp.int32))
+
+
+def decode_step(cfg: ModelConfig, run: RunConfig, params, cache: EncDecCache,
+                token):
+    length = cache.length
+    pos = jnp.full((1, 1), length, jnp.int32)
+    x = _dec_embed(cfg, params, token, pos)
+
+    def layer(x, inp):
+        p, sk, sv, ck, cv = inp
+        h = apply_norm(cfg, p["norm1"], x)
+        h, nk, nv = attn_lib.attn_decode_layer(
+            cfg, p["self_attn"], h, sk, sv, length, mixer="attn",
+            impl=run.attn_impl)
+        x = x + h
+        h = apply_norm(cfg, p["norm_x"], x)
+        x = x + attn_lib.cross_attn_forward(cfg, p["cross_attn"], h, ck, cv,
+                                            impl=run.attn_impl)
+        h = apply_norm(cfg, p["norm2"], x)
+        x = x + mlp_lib.mlp_apply(cfg, p["mlp"], h)
+        return x, (nk, nv)
+
+    x, (nsk, nsv) = jax.lax.scan(
+        layer, x, (params["dec_blocks"], cache.self_k, cache.self_v,
+                   cache.cross_k, cache.cross_v))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = _dec_head(cfg, params, x[:, 0])
+    return logits, EncDecCache(nsk, nsv, cache.cross_k, cache.cross_v,
+                               length + 1)

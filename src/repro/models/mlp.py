@@ -1,0 +1,43 @@
+"""Dense MLP sublayer: gated (SwiGLU-family) or classic 2-matrix variants."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.dist import context as dctx
+from repro.models.common import AxSpec, ModelConfig, act_fn
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None,
+              d_in: Optional[int] = None):
+    d = d_in or cfg.d_model
+    f = d_ff or cfg.d_ff
+    p = {
+        "w1": AxSpec((d, f), ("d_model", "d_ff")),
+        "w2": AxSpec((f, d), ("d_ff", "d_model")),
+    }
+    if cfg.gated_mlp:
+        p["w3"] = AxSpec((d, f), ("d_model", "d_ff"))
+    if cfg.mlp_bias:
+        p["b1"] = AxSpec((f,), ("d_ff",), "zeros")
+        p["b2"] = AxSpec((d,), ("d_model",), "zeros")
+    return p
+
+
+def mlp_apply(cfg: ModelConfig, p, x):
+    act = act_fn(cfg.act)
+    mid = [None] * (x.ndim - 2)  # Megatron layout: d_ff over "model"
+    h = jnp.einsum("...d,df->...f", x, p["w1"].astype(x.dtype))
+    if "b1" in p:
+        h = h + p["b1"].astype(h.dtype)
+    h = act(h)
+    if "w3" in p:
+        h = h * dctx.constrain(
+            jnp.einsum("...d,df->...f", x, p["w3"].astype(x.dtype)),
+            *mid, "model")
+    h = dctx.constrain(h, *mid, "model")
+    y = jnp.einsum("...f,fd->...d", h, p["w2"].astype(x.dtype))
+    if "b2" in p:
+        y = y + p["b2"].astype(y.dtype)
+    return dctx.constrain(y, *mid, None)

@@ -1,0 +1,174 @@
+"""Config -> Model dispatch + per-(arch × shape) input specs.
+
+``build(cfg)`` returns a ``Model`` facade whose methods close over the right
+family implementation (decoder LM / encoder-decoder / encoder classifier).
+``input_specs`` produces ShapeDtypeStruct stand-ins for every model input of a
+named shape cell — the dry-run lowers against these with zero allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.common import (ModelConfig, RunConfig, abstract_params,
+                                 init_params, is_axspec, param_count)
+
+# shape-cell registry: name -> (seq_len, global_batch, kind)
+SHAPES: Dict[str, Tuple[int, int, str]] = {
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+I32 = jnp.int32
+BF16 = jnp.bfloat16
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """(runnable, reason-if-skip) for an (arch × shape) cell."""
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, ("full quadratic attention at 500k context is "
+                       "architecturally infeasible (see DESIGN.md)")
+    if cfg.bidirectional and shape in ("decode_32k", "long_500k"):
+        return False, "encoder-only model has no decode step"
+    return True, ""
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    param_specs: Any
+    active_param_count: int
+
+    # -- params ---------------------------------------------------------
+    def init(self, key):
+        return init_params(key, self.param_specs)
+
+    def abstract(self):
+        return abstract_params(self.param_specs)
+
+    @property
+    def n_params(self) -> int:
+        return param_count(self.param_specs)
+
+    # -- compute --------------------------------------------------------
+    def forward(self, run: RunConfig, params, batch):
+        """batch dict -> (logits, aux). Used by training and eval."""
+        cfg = self.cfg
+        if cfg.encdec:
+            return encdec.forward(cfg, run, params,
+                                  enc_embeds=batch["enc_embeds"],
+                                  tokens=batch["tokens"])
+        return transformer.forward(cfg, run, params,
+                                   tokens=batch.get("tokens"),
+                                   embeddings=batch.get("embeddings"))
+
+    def prefill(self, run: RunConfig, params, batch,
+                max_len: Optional[int] = None):
+        cfg = self.cfg
+        if cfg.encdec:
+            return encdec.prefill(cfg, run, params,
+                                  enc_embeds=batch["enc_embeds"],
+                                  tokens=batch["tokens"], max_len=max_len)
+        return transformer.prefill(cfg, run, params,
+                                   tokens=batch.get("tokens"),
+                                   embeddings=batch.get("embeddings"),
+                                   max_len=max_len)
+
+    def decode_step(self, run: RunConfig, params, cache, batch):
+        cfg = self.cfg
+        if cfg.encdec:
+            return encdec.decode_step(cfg, run, params, cache,
+                                      batch["token"])
+        return transformer.decode_step(cfg, run, params, cache,
+                                       token=batch.get("token"),
+                                       embedding=batch.get("embedding"))
+
+    # -- cache ----------------------------------------------------------
+    def cache_specs(self, batch: int, max_len: int,
+                    enc_len: Optional[int] = None):
+        if self.cfg.encdec:
+            return encdec.cache_specs(self.cfg, batch, max_len,
+                                      enc_len or max_len)
+        return transformer.cache_specs(self.cfg, batch, max_len)
+
+    def init_cache(self, batch: int, max_len: int,
+                   enc_len: Optional[int] = None):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_specs(batch, max_len, enc_len))
+
+    # -- dry-run inputs ---------------------------------------------------
+    def input_specs(self, shape: str, run: RunConfig = RunConfig()):
+        """(kind, batch_inputs, cache_or_None) — all ShapeDtypeStruct."""
+        cfg = self.cfg
+        seq, gb, kind = SHAPES[shape]
+        ok, why = shape_applicable(cfg, shape)
+        if not ok:
+            raise SkipCell(why)
+        sds = jax.ShapeDtypeStruct
+        if kind == "train":
+            if cfg.encdec:
+                inputs = {"enc_embeds": sds((gb, seq, cfg.enc_d_model
+                                             or cfg.d_model), BF16),
+                          "tokens": sds((gb, seq), I32),
+                          "labels": sds((gb, seq), I32)}
+            elif cfg.input_mode == "embeddings":
+                inputs = {"embeddings": sds((gb, seq, cfg.d_model), BF16),
+                          "labels": sds((gb, seq), I32)}
+            elif cfg.bidirectional:
+                inputs = {"tokens": sds((gb, seq), I32),
+                          "labels": sds((gb,), I32)}
+            else:
+                inputs = {"tokens": sds((gb, seq), I32),
+                          "labels": sds((gb, seq), I32)}
+            return kind, inputs, None
+        if kind == "prefill":
+            if cfg.encdec:
+                inputs = {"enc_embeds": sds((gb, seq, cfg.enc_d_model
+                                             or cfg.d_model), BF16),
+                          "tokens": sds((gb, seq), I32)}
+            elif cfg.input_mode == "embeddings":
+                inputs = {"embeddings": sds((gb, seq, cfg.d_model), BF16)}
+            else:
+                inputs = {"tokens": sds((gb, seq), I32)}
+            return kind, inputs, None
+        # decode: one new token against a cache of length `seq`
+        max_len = seq + run.cache_pad
+        cache = self.cache_specs(gb, max_len, enc_len=seq)
+        inputs = {"token": sds((gb, 1), I32)}
+        return kind, inputs, cache
+
+
+class SkipCell(Exception):
+    """Raised when an (arch × shape) cell is architecturally inapplicable."""
+
+
+def _active_params(cfg: ModelConfig, specs) -> int:
+    """Parameter count on the active path (MoE: top_k + shared only)."""
+    total = param_count(specs)
+    if cfg.moe is None:
+        return total
+    mc = cfg.moe
+    n_moe_layers = cfg.n_groups * sum(
+        1 for s in cfg.pattern if s.mlp == "moe")
+    n_mats = 3 if cfg.gated_mlp else 2
+    routed_all = n_moe_layers * mc.num_experts * n_mats * cfg.d_model \
+        * mc.expert_ff
+    routed_active = n_moe_layers * mc.top_k * n_mats * cfg.d_model \
+        * mc.expert_ff
+    return total - routed_all + routed_active
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.encdec:
+        specs = encdec.encdec_specs(cfg)
+    else:
+        specs = transformer.lm_specs(cfg)
+    return Model(cfg=cfg, param_specs=specs,
+                 active_param_count=_active_params(cfg, specs))

@@ -1,0 +1,319 @@
+"""Mixture-of-Experts sublayer: top-k router + three dispatch strategies.
+
+Dispatch impls (RunConfig.moe_impl / auto-selected by token count):
+  * "einsum"  — classic GShard capacity-based one-hot dispatch einsums.
+                Clean and differentiable, but the dispatch matmul is
+                O(tokens² · k / E)-ish per group — only sane for SMALL
+                token counts (decode steps, smoke tests).
+  * "scatter" — capacity-based dispatch via scatter-add/gather. No
+                dispatch matmul at all: FLOPs = active expert FLOPs, memory
+                = E·C·D ≈ 1.25·k·T·D. The production default for
+                train/prefill. Tokens over capacity are dropped (classic
+                Switch semantics, capacity_factor-controlled).
+  * "ragged"  — sort-based DROPLESS dispatch using jax.lax.ragged_dot:
+                tokens sorted by expert, per-expert ragged GEMM, exact
+                active compute, no capacity drops. (Beyond-paper perf
+                lever; differentiable in this JAX version.)
+
+Expert parallelism: expert-stacked weights carry the logical axis
+"experts" which the planner maps to the "model" mesh axis when divisible
+(falls back to d_ff sharding otherwise — e.g. 60 experts on a 16-wide
+axis).
+
+Shared experts (Qwen-MoE style) run densely alongside the routed experts.
+Returns (y, aux) where aux carries the load-balancing loss term.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import context as dctx
+from repro.models.common import AxSpec, ModelConfig, MoEConfig, act_fn, softcap
+from repro.models import mlp as mlp_lib
+
+
+def moe_specs(cfg: ModelConfig, mc: MoEConfig):
+    d, e, f = cfg.d_model, mc.num_experts, mc.expert_ff
+    p = {
+        "router": AxSpec((d, e), ("d_model", "experts"), "small",
+                         jnp.float32),
+        "w1": AxSpec((e, d, f), ("experts", "d_model", "d_ff")),
+        "w2": AxSpec((e, f, d), ("experts", "d_ff", "d_model")),
+    }
+    if cfg.gated_mlp:
+        p["w3"] = AxSpec((e, d, f), ("experts", "d_model", "d_ff"))
+    if mc.num_shared:
+        shared_ff = mc.shared_ff or mc.expert_ff * mc.num_shared
+        p["shared"] = mlp_lib.mlp_specs(cfg, d_ff=shared_ff)
+        p["shared_gate"] = AxSpec((d, 1), ("d_model", None), "small",
+                                  jnp.float32)
+    return p
+
+
+def capacity(mc: MoEConfig, n_tokens: int) -> int:
+    c = int(math.ceil(mc.capacity_factor * mc.top_k * n_tokens /
+                      mc.num_experts))
+    return max(4 * ((c + 3) // 4), mc.top_k)
+
+
+def _route(mc: MoEConfig, p, xt):
+    """Shared router: returns (gate_vals (T,k) fp32, gate_idx (T,k) i32,
+    probs (T,E) fp32)."""
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    logits = softcap(logits, mc.router_softcap)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, mc.top_k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    return gate_vals, gate_idx, probs
+
+
+def _lb_loss(mc: MoEConfig, gate_idx, probs):
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(gate_idx[:, 0], mc.num_experts, dtype=jnp.float32),
+        axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    return mc.num_experts * jnp.sum(frac_tokens * frac_probs)
+
+
+def _positions_in_expert(mc: MoEConfig, gate_idx, c: int):
+    """GShard slot-priority positions. Returns (pos (T,k) i32 clipped to c,
+    keep (T,k) bool)."""
+    t = gate_idx.shape[0]
+    e = mc.num_experts
+    counts = jnp.zeros((e,), jnp.float32)
+    pos_all, keep_all = [], []
+    for j in range(mc.top_k):
+        oh = jax.nn.one_hot(gate_idx[:, j], e, dtype=jnp.float32)
+        pos_e = (jnp.cumsum(oh, axis=0) - 1.0) + counts[None, :]
+        pos_j = jnp.sum(pos_e * oh, axis=-1)  # (T,)
+        keep_all.append(pos_j < c)
+        pos_all.append(pos_j.astype(jnp.int32))
+        counts = counts + jnp.sum(oh, axis=0)
+    return jnp.stack(pos_all, 1), jnp.stack(keep_all, 1)
+
+
+def _jit_gather(w, spec):
+    """ZeRO-3 just-in-time weight gather: re-shard the (small) expert
+    weights to their compute layout right before the einsum. Without this
+    hint XLA's SPMD cost model may instead ALL-REDUCE the (huge) expert
+    activations over the fsdp axis — measured 10+ TB/chip per step on
+    qwen2-moe train_4k (see EXPERIMENTS.md §Perf iteration 1).
+
+    Under the pure-FSDP strategy (batch over every axis, no TP) the
+    compute layout is fully replicated weights — the classic ZeRO-3
+    gather."""
+    if "model" in dctx.dp_axes():  # pure-FSDP mode
+        return dctx.constrain_dims(w, (None,) * w.ndim)
+    return dctx.constrain_dims(w, spec)
+
+
+def _expert_mlp(cfg, p, x, dtype, jit_gather: bool = True):
+    """x: (E,C,D) or (G,E,C,D) — per-expert batched MLP.
+
+    ``jit_gather`` applies the ZeRO-3 weight re-shard hint — right for the
+    large-T train/prefill dispatch, WRONG for decode (tp2d inference keeps
+    weights 2D-sharded; regathering 10 GB of grok experts per decoded
+    token measured X 61→1620 ms — §Perf notes)."""
+    act = act_fn(cfg.act)
+    pre = "g" if x.ndim == 4 else ""
+    gather = _jit_gather if jit_gather else (lambda w, spec: w)
+    w1 = gather(p["w1"].astype(dtype), ("model", None, "model"))
+    h = act(jnp.einsum(f"{pre}ecd,edf->{pre}ecf", x, w1))
+    if "w3" in p:
+        w3 = gather(p["w3"].astype(dtype), ("model", None, "model"))
+        h = h * jnp.einsum(f"{pre}ecd,edf->{pre}ecf", x, w3)
+    w2 = gather(p["w2"].astype(dtype), ("model", "model", None))
+    return jnp.einsum(f"{pre}ecf,efd->{pre}ecd", h, w2)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch implementations
+# ---------------------------------------------------------------------------
+
+
+def _apply_einsum(cfg, mc, p, xt, gate_vals, gate_idx):
+    t = xt.shape[0]
+    e, k = mc.num_experts, mc.top_k
+    c = capacity(mc, t)
+    counts = jnp.zeros((e,), jnp.float32)
+    dispatch = jnp.zeros((t, e, c), xt.dtype)
+    combine = jnp.zeros((t, e, c), jnp.float32)
+    for j in range(k):
+        oh = jax.nn.one_hot(gate_idx[:, j], e, dtype=jnp.float32)
+        pos = (jnp.cumsum(oh, axis=0) - 1.0) + counts[None, :]
+        keep = oh * (pos < c)
+        pos_idx = jnp.clip(pos, 0, c - 1).astype(jnp.int32)
+        slot = jax.nn.one_hot(pos_idx, c, dtype=jnp.float32) \
+            * keep[..., None]
+        dispatch = dispatch + slot.astype(xt.dtype)
+        combine = combine + slot * gate_vals[:, j][:, None, None]
+        counts = counts + jnp.sum(oh, axis=0)
+    expert_in = jnp.einsum("tec,td->ecd", dispatch, xt)
+    expert_out = _expert_mlp(cfg, p, expert_in, xt.dtype, jit_gather=False)
+    return jnp.einsum("tec,ecd->td", combine.astype(xt.dtype), expert_out)
+
+
+def _dp_groups(t: int, k: int) -> int:
+    """Dispatch-group count = data-parallel shard count (when divisible).
+
+    Grouping makes every scatter/gather LOCAL to its data shard (GShard
+    per-device groups). Without it, XLA combines the per-shard scatters
+    into a shared (E·C, D) buffer with a full-buffer all-reduce over the
+    data axis — measured 5.4 GB × 2 × layers × microbatches per step on
+    qwen2-moe train_4k, >90% of the cell's collective time (§Perf it. 2).
+    """
+    mesh = dctx.get_mesh()
+    if mesh is None:
+        return 1
+    g = 1
+    for a in dctx.dp_axes(mesh):
+        g *= mesh.shape[a]
+    if g <= 1 or t % g or (t // g) < 4 * k:
+        return 1
+    return g
+
+
+def _positions_in_expert_grouped(mc: MoEConfig, gate_idx, c: int):
+    """Slot-priority positions per group. gate_idx: (G,Tl,k).
+    Returns pos (G,Tl,k) int32, keep (G,Tl,k) bool."""
+    g, tl, k = gate_idx.shape
+    e = mc.num_experts
+    counts = jnp.zeros((g, e), jnp.float32)
+    pos_all, keep_all = [], []
+    for j in range(k):
+        oh = jax.nn.one_hot(gate_idx[..., j], e, dtype=jnp.float32)
+        pos_e = (jnp.cumsum(oh, axis=1) - 1.0) + counts[:, None, :]
+        pos_j = jnp.sum(pos_e * oh, axis=-1)  # (G,Tl)
+        keep_all.append(pos_j < c)
+        pos_all.append(pos_j.astype(jnp.int32))
+        counts = counts + jnp.sum(oh, axis=1)
+    return jnp.stack(pos_all, -1), jnp.stack(keep_all, -1)
+
+
+def _shmap_over_groups(body, *args):
+    """Run ``body`` with the leading (group) dim manually sharded over the
+    batch axes via shard_map — XLA's SPMD scatter partitioner cannot
+    partition batched scatter/gather along the group dim and instead
+    all-gathers the 30+GB dispatch tensors (§Perf iteration 3 failure
+    analysis); shard_map makes the locality structural."""
+    mesh = dctx.get_mesh()
+    dp = dctx.dp_axes()
+    if mesh is None or not dp:
+        return body(*args)
+    dp_size = 1
+    flat = []
+    for a in dp:
+        dp_size *= mesh.shape[a]
+        flat.append(a)
+    g = args[0].shape[0]
+    if g % dp_size:
+        return body(*args)
+    specs = tuple(P(dp, *([None] * (a.ndim - 1))) for a in args)
+    out_shapes = jax.eval_shape(body, *args)
+    out_specs = jax.tree.map(
+        lambda s: P(dp, *([None] * (len(s.shape) - 1))), out_shapes)
+    return jax.shard_map(body, mesh=mesh, in_specs=specs,
+                         out_specs=out_specs,
+                         axis_names=frozenset(flat),
+                         check_vma=False)(*args)
+
+
+def _apply_scatter(cfg, mc, p, xt, gate_vals, gate_idx):
+    t, d = xt.shape
+    e, k = mc.num_experts, mc.top_k
+    g = _dp_groups(t, k)
+    tl = t // g
+    c = capacity(mc, tl)
+
+    xg = dctx.constrain_dims(xt.reshape(g, tl, d),
+                             (dctx.dp_axes() or None, None, None))
+    idx_g = gate_idx.reshape(g, tl, k)
+    val_g = gate_vals.reshape(g, tl, k)
+    pos, keep = _positions_in_expert_grouped(mc, idx_g, c)
+    # flat slot into (E*C [+1 overflow row]); dropped tokens -> overflow
+    slot = idx_g * c + jnp.clip(pos, 0, c - 1)
+    slot = jnp.where(keep, slot, e * c)  # (G,Tl,k)
+
+    def dispatch(xg, slot):
+        gl = xg.shape[0]
+        gidx = jnp.broadcast_to(jnp.arange(gl)[:, None], (gl, tl * k))
+        buf = jnp.zeros((gl, e * c + 1, d), xg.dtype)
+        buf = buf.at[gidx, slot.reshape(gl, -1)].add(
+            jnp.repeat(xg[:, :, None], k, 2).reshape(gl, -1, d),
+            mode="drop")
+        return buf[:, :e * c]
+
+    expert_in = _shmap_over_groups(dispatch, xg, slot).reshape(g, e, c, d)
+    expert_in = dctx.constrain_dims(
+        expert_in, (dctx.dp_axes() or None, None, None, None))
+    expert_out = _expert_mlp(cfg, p, expert_in, xt.dtype)
+    expert_out = dctx.constrain_dims(
+        expert_out, (dctx.dp_axes() or None, None, None, None))
+
+    def combine(flat_out, slot, w):
+        gl = flat_out.shape[0]
+        gidx = jnp.broadcast_to(jnp.arange(gl)[:, None], (gl, tl * k))
+        padded = jnp.concatenate(
+            [flat_out, jnp.zeros((gl, 1, d), flat_out.dtype)], 1)
+        gathered = padded[gidx, slot.reshape(gl, -1)].reshape(gl, tl, k, d)
+        return jnp.einsum("gtkd,gtk->gtd", gathered, w)
+
+    w = (val_g * keep).astype(xt.dtype)
+    y = _shmap_over_groups(combine, expert_out.reshape(g, e * c, d),
+                           slot, w)
+    return y.reshape(t, d)
+
+
+def _apply_ragged(cfg, mc, p, xt, gate_vals, gate_idx):
+    """Sort-based dropless dispatch via jax.lax.ragged_dot (no drops)."""
+    t, d = xt.shape
+    e, k = mc.num_experts, mc.top_k
+    act = act_fn(cfg.act)
+    flat_e = gate_idx.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat_e)
+    tok_of = order // k
+    xs = xt[tok_of]  # (T*k, D) sorted by expert
+    group_sizes = jnp.bincount(flat_e, length=e).astype(jnp.int32)
+    h = act(jax.lax.ragged_dot(xs, p["w1"].astype(xt.dtype), group_sizes))
+    if "w3" in p:
+        h = h * jax.lax.ragged_dot(xs, p["w3"].astype(xt.dtype), group_sizes)
+    ys = jax.lax.ragged_dot(h, p["w2"].astype(xt.dtype), group_sizes)
+    # unsort + combine with gates
+    gates_sorted = gate_vals.reshape(-1)[order].astype(xt.dtype)
+    contrib = ys * gates_sorted[:, None]
+    y = jnp.zeros((t, d), xt.dtype).at[tok_of].add(contrib)
+    return y
+
+
+def moe_apply(cfg: ModelConfig, mc: MoEConfig, p, x, impl: str = "auto"):
+    """x: (B,S,D) or (T,D). Returns (y, {"lb_loss": scalar})."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    xt = x.reshape(-1, d)
+    t = xt.shape[0]
+    if impl == "auto":
+        impl = "einsum" if t <= 2048 else "scatter"
+
+    gate_vals, gate_idx, probs = _route(mc, p, xt)
+    if impl == "einsum":
+        y = _apply_einsum(cfg, mc, p, xt, gate_vals, gate_idx)
+    elif impl == "scatter":
+        y = _apply_scatter(cfg, mc, p, xt, gate_vals, gate_idx)
+    elif impl == "ragged":
+        y = _apply_ragged(cfg, mc, p, xt, gate_vals, gate_idx)
+    else:
+        raise ValueError(f"unknown moe impl {impl!r}")
+
+    if "shared" in p:
+        sh = mlp_lib.mlp_apply(cfg, p["shared"], xt)
+        g = jax.nn.sigmoid(
+            jnp.einsum("td,dz->tz", xt.astype(jnp.float32),
+                       p["shared_gate"]))
+        y = y + (sh * g.astype(sh.dtype))
+
+    return y.reshape(orig_shape), {"lb_loss": _lb_loss(mc, gate_idx, probs)}

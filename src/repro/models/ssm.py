@@ -1,0 +1,264 @@
+"""Mamba-2 mixer (SSD — state-space duality), chunked-scan formulation.
+
+Layout notes (TPU adaptation): the packed in-projection of the reference CUDA
+implementation is split into per-stream projections (x / B / C / dt / z).
+A depthwise causal conv is separable per channel, so splitting the conv across
+the x/B/C streams is mathematically identical to the fused conv while keeping
+every d_inner-sized tensor cleanly shardable over the "model" mesh axis.
+
+State convention: state[b, h, p, n]  (head, head_dim, d_state).
+Recurrence: state_s = exp(dt_s A_h) · state_{s-1} + dt_s · x_s ⊗ B_s
+            y_s     = state_s · C_s + D_h · x_s
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import AxSpec, ModelConfig, SSMConfig, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def ssm_specs(cfg: ModelConfig, sc: SSMConfig):
+    d = cfg.d_model
+    di = sc.d_inner(d)
+    h = sc.n_heads(d)
+    gn = sc.n_groups * sc.d_state
+    k = sc.d_conv
+    return {
+        "wz": AxSpec((d, di), ("d_model", "ssm_inner")),
+        "wx": AxSpec((d, di), ("d_model", "ssm_inner")),
+        "wB": AxSpec((d, gn), ("d_model", None)),
+        "wC": AxSpec((d, gn), ("d_model", None)),
+        "wdt": AxSpec((d, h), ("d_model", "heads")),
+        "conv_wx": AxSpec((k, di), (None, "ssm_inner"), "normal", jnp.bfloat16, 0.3),
+        "conv_bx": AxSpec((di,), ("ssm_inner",), "zeros"),
+        "conv_wB": AxSpec((k, gn), (None, None), "normal", jnp.bfloat16, 0.3),
+        "conv_bB": AxSpec((gn,), (None,), "zeros"),
+        "conv_wC": AxSpec((k, gn), (None, None), "normal", jnp.bfloat16, 0.3),
+        "conv_bC": AxSpec((gn,), (None,), "zeros"),
+        "A_log": AxSpec((h,), ("heads",), "ones", jnp.float32),
+        "dt_bias": AxSpec((h,), ("heads",), "zeros", jnp.float32),
+        "D": AxSpec((h,), ("heads",), "ones", jnp.float32),
+        "norm_scale": AxSpec((di,), ("ssm_inner",), "zeros", jnp.float32),
+        "out_proj": AxSpec((di, d), ("ssm_inner", "d_model")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv (separable per stream)
+# ---------------------------------------------------------------------------
+
+
+def _conv_full(x, w, b):
+    """x: (B,S,C), w: (K,C) depthwise causal; returns silu(conv(x))."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    s = x.shape[1]
+    y = sum(pad[:, i:i + s] * w[i].astype(x.dtype) for i in range(k))
+    return jax.nn.silu(y + b.astype(x.dtype))
+
+
+def _conv_step(window, w, b):
+    """window: (B,K,C) — last K raw inputs incl. current; returns (B,C)."""
+    y = jnp.einsum("bkc,kc->bc", window, w.astype(window.dtype))
+    return jax.nn.silu(y + b.astype(window.dtype))
+
+
+def _expand_groups(t, h):
+    """(B,...,G,N) -> (B,...,H,N) by repeating each group H/G times."""
+    g = t.shape[-2]
+    return jnp.repeat(t, h // g, axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence chunked SSD
+# ---------------------------------------------------------------------------
+
+
+def ssm_forward(cfg: ModelConfig, sc: SSMConfig, p, u, *,
+                return_state: bool = False):
+    """u: (B,S,D) -> (B,S,D). Optionally returns the decode cache."""
+    b, s_orig, d = u.shape
+    di = sc.d_inner(d)
+    h = sc.n_heads(d)
+    hp = sc.head_dim
+    n = sc.d_state
+    q = min(sc.chunk, s_orig)
+    # causal: trailing zero-pad up to a chunk multiple never affects the
+    # outputs at real positions (it does pollute the final state, so the
+    # prefill path, which needs the state, requires divisibility).
+    pad_s = (-s_orig) % q
+    if pad_s and return_state:
+        raise ValueError(
+            f"prefill seq {s_orig} must be divisible by ssd chunk {q}")
+    u = jnp.pad(u, ((0, 0), (0, pad_s), (0, 0))) if pad_s else u
+    s = s_orig + pad_s
+    nc = s // q
+
+    z = jnp.einsum("bsd,de->bse", u, p["wz"].astype(u.dtype))
+    x_raw = jnp.einsum("bsd,de->bse", u, p["wx"].astype(u.dtype))
+    b_raw = jnp.einsum("bsd,de->bse", u, p["wB"].astype(u.dtype))
+    c_raw = jnp.einsum("bsd,de->bse", u, p["wC"].astype(u.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", u, p["wdt"].astype(u.dtype))
+
+    x = _conv_full(x_raw, p["conv_wx"], p["conv_bx"])
+    bm = _conv_full(b_raw, p["conv_wB"], p["conv_bB"])
+    cm = _conv_full(c_raw, p["conv_wC"], p["conv_bC"])
+
+    xh = x.reshape(b, s, h, hp).astype(jnp.float32)
+    bh = _expand_groups(bm.reshape(b, s, sc.n_groups, n), h).astype(jnp.float32)
+    ch = _expand_groups(cm.reshape(b, s, sc.n_groups, n), h).astype(jnp.float32)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["A_log"])  # (H,) negative
+
+    # chunk reshape
+    xh = xh.reshape(b, nc, q, h, hp)
+    bh = bh.reshape(b, nc, q, h, n)
+    ch = ch.reshape(b, nc, q, h, n)
+    dtc = dtp.reshape(b, nc, q, h)
+
+    da = dtc * a  # (B,Nc,Q,H)
+    cum = jnp.cumsum(da, axis=2)
+
+    # --- intra-chunk (quadratic within chunk) -------------------------------
+    att = jnp.einsum("bzihn,bzjhn->bhzij", ch, bh)  # (B,H,Nc,Q,Q)
+    seg = jnp.exp(cum.transpose(0, 3, 1, 2)[..., :, None]
+                  - cum.transpose(0, 3, 1, 2)[..., None, :])  # (B,H,Nc,Q,Q)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    m = jnp.where(mask, att * seg, 0.0)
+    m = m * dtc.transpose(0, 3, 1, 2)[..., None, :]  # × dt_j
+    y_diag = jnp.einsum("bhzij,bzjhp->bzihp", m, xh)
+
+    # --- chunk states --------------------------------------------------------
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,Nc,Q,H)
+    sz = jnp.einsum("bzjh,bzjhp,bzjhn->bzhpn", decay_end * dtc, xh, bh)
+
+    # --- inter-chunk recurrence (sequential over chunks) ---------------------
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,Nc,H)
+
+    def step(carry, inp):
+        s_c, dec = inp
+        new = dec[..., None, None] * carry + s_c
+        return new, carry  # emit state BEFORE this chunk
+
+    init = jnp.zeros((b, h, hp, n), jnp.float32)
+    final_state, states_prev = jax.lax.scan(
+        step, init, (sz.transpose(1, 0, 2, 3, 4),
+                     chunk_decay.transpose(1, 0, 2)))
+    states_prev = states_prev.transpose(1, 0, 2, 3, 4)  # (B,Nc,H,P,N)
+
+    y_off = jnp.einsum("bzihn,bzhpn->bzihp", ch, states_prev) \
+        * jnp.exp(cum)[..., None]
+    y = (y_diag + y_off).reshape(b, s, h, hp) \
+        + xh.reshape(b, s, h, hp) * p["D"][:, None]
+    y = y.reshape(b, s, di)
+
+    # gated RMSNorm + out projection
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(u.dtype),
+                 p["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(u.dtype))
+    if pad_s:
+        out = out[:, :s_orig]
+    if not return_state:
+        return out
+
+    k = sc.d_conv
+    cache = {
+        "conv_x": x_raw[:, s - (k - 1):].astype(jnp.bfloat16),
+        "conv_B": b_raw[:, s - (k - 1):].astype(jnp.bfloat16),
+        "conv_C": c_raw[:, s - (k - 1):].astype(jnp.bfloat16),
+        "state": final_state,
+    }
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode
+# ---------------------------------------------------------------------------
+
+
+def ssm_decode(cfg: ModelConfig, sc: SSMConfig, p, u, cache):
+    """u: (B,1,D); cache: conv_x/B/C (B,K-1,·), state (B,H,P,N)."""
+    b, _, d = u.shape
+    di = sc.d_inner(d)
+    h = sc.n_heads(d)
+    hp = sc.head_dim
+    n = sc.d_state
+
+    z = jnp.einsum("bsd,de->bse", u, p["wz"].astype(u.dtype))[:, 0]
+    x_raw = jnp.einsum("bsd,de->bse", u, p["wx"].astype(u.dtype))[:, 0]
+    b_raw = jnp.einsum("bsd,de->bse", u, p["wB"].astype(u.dtype))[:, 0]
+    c_raw = jnp.einsum("bsd,de->bse", u, p["wC"].astype(u.dtype))[:, 0]
+    dt = jnp.einsum("bsd,dh->bsh", u, p["wdt"].astype(u.dtype))[:, 0]
+
+    def upd(cc, raw, w, bias):
+        win = jnp.concatenate([cc.astype(raw.dtype), raw[:, None]], axis=1)
+        out = _conv_step(win, w, bias)
+        return out, win[:, 1:].astype(cc.dtype)
+
+    x, conv_x = upd(cache["conv_x"], x_raw, p["conv_wx"], p["conv_bx"])
+    bm, conv_b = upd(cache["conv_B"], b_raw, p["conv_wB"], p["conv_bB"])
+    cm, conv_c = upd(cache["conv_C"], c_raw, p["conv_wC"], p["conv_bC"])
+
+    xh = x.reshape(b, h, hp).astype(jnp.float32)
+    bh = _expand_groups(bm.reshape(b, sc.n_groups, n), h).astype(jnp.float32)
+    ch = _expand_groups(cm.reshape(b, sc.n_groups, n), h).astype(jnp.float32)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["A_log"])
+
+    decay = jnp.exp(dtp * a)  # (B,H)
+    state = cache["state"] * decay[..., None, None] + \
+        jnp.einsum("bh,bhp,bhn->bhpn", dtp, xh, bh)
+    y = jnp.einsum("bhpn,bhn->bhp", state, ch) + xh * p["D"][:, None]
+    y = y.reshape(b, di)
+
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(u.dtype),
+                 p["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"].astype(u.dtype))[:, None]
+    new_cache = {"conv_x": conv_x, "conv_B": conv_b, "conv_C": conv_c,
+                 "state": state}
+    return out, new_cache
+
+
+def ssm_cache_specs(cfg: ModelConfig, sc: SSMConfig, batch: int):
+    """Abstract decode-cache leaves for one layer (no allocation)."""
+    d = cfg.d_model
+    di = sc.d_inner(d)
+    h = sc.n_heads(d)
+    gn = sc.n_groups * sc.d_state
+    k = sc.d_conv
+    return {
+        "conv_x": jax.ShapeDtypeStruct((batch, k - 1, di), jnp.bfloat16),
+        "conv_B": jax.ShapeDtypeStruct((batch, k - 1, gn), jnp.bfloat16),
+        "conv_C": jax.ShapeDtypeStruct((batch, k - 1, gn), jnp.bfloat16),
+        "state": jax.ShapeDtypeStruct((batch, h, sc.head_dim, sc.d_state),
+                                      jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Naive sequential reference (oracle for tests)
+# ---------------------------------------------------------------------------
+
+
+def ssm_forward_naive(cfg: ModelConfig, sc: SSMConfig, p, u):
+    """Token-by-token recurrence; O(S) scan — test oracle for ssm_forward."""
+    b, s, d = u.shape
+    k = sc.d_conv
+    cache = {
+        "conv_x": jnp.zeros((b, k - 1, sc.d_inner(d)), jnp.bfloat16),
+        "conv_B": jnp.zeros((b, k - 1, sc.n_groups * sc.d_state), jnp.bfloat16),
+        "conv_C": jnp.zeros((b, k - 1, sc.n_groups * sc.d_state), jnp.bfloat16),
+        "state": jnp.zeros((b, sc.n_heads(d), sc.head_dim, sc.d_state),
+                           jnp.float32),
+    }
+    outs = []
+    for i in range(s):
+        o, cache = ssm_decode(cfg, sc, p, u[:, i:i + 1], cache)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)

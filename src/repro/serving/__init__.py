@@ -1,0 +1,4 @@
+"""Serving substrate: engine, sampler, continuous batching."""
+from repro.serving.batching import Request, SlotScheduler  # noqa: F401
+from repro.serving.engine import Engine, timed  # noqa: F401
+from repro.serving.sampler import sample  # noqa: F401

@@ -1,0 +1,64 @@
+"""Continuous batching: slot-based admission over a shared decode step.
+
+A fixed number of decode slots share one compiled decode executable; new
+requests are admitted into freed slots between steps (the vLLM-style
+scheduling idea at the granularity this framework needs). Used by the
+serve_cluster example and the serving benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray      # (S,) int32
+    max_new_tokens: int
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class SlotScheduler:
+    """Tracks which decode slot serves which request."""
+
+    n_slots: int
+
+    def __post_init__(self):
+        self.slots: List[Optional[Request]] = [None] * self.n_slots
+        self.queue: List[Request] = []
+        self.completed: List[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def admit(self) -> List[int]:
+        """Fill free slots from the queue; returns newly-admitted slot ids."""
+        admitted = []
+        for i in range(self.n_slots):
+            if self.slots[i] is None and self.queue:
+                self.slots[i] = self.queue.pop(0)
+                admitted.append(i)
+        return admitted
+
+    def step_done(self, slot: int, token: int):
+        req = self.slots[slot]
+        if req is None:
+            return
+        req.generated.append(int(token))
+        if len(req.generated) >= req.max_new_tokens:
+            req.done = True
+            self.completed.append(req)
+            self.slots[slot] = None
+
+    @property
+    def active(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(s is None for s in self.slots)

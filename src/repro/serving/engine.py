@@ -1,0 +1,95 @@
+"""Inference engine: jit-compiled classify / prefill / decode / generate.
+
+This is the compute payload that the paper's "serverless functions" invoke
+(core/worker.py). On a pod it runs pjit-sharded; on this CPU container it
+runs single-device. Compilation is cached per (shape bucket) so repeated
+worker invocations hit warm executables — the cold/warm distinction that
+the cost model accounts for.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import RunConfig
+from repro.models.model_zoo import Model
+from repro.serving.sampler import sample
+
+
+@dataclasses.dataclass
+class Engine:
+    model: Model
+    run: RunConfig = RunConfig()
+    donate_cache: bool = True
+
+    def __post_init__(self):
+        cfg = self.model.cfg
+        run = self.run
+
+        def _classify(params, tokens):
+            logits, _ = self.model.forward(run, params, {"tokens": tokens})
+            return logits
+
+        def _forward_last(params, batch):
+            logits, _ = self.model.forward(run, params, batch)
+            return logits[:, -1] if logits.ndim == 3 else logits
+
+        def _prefill(params, batch):
+            return self.model.prefill(run, params, batch)
+
+        def _decode(params, cache, token):
+            return self.model.decode_step(run, params, cache,
+                                          {"token": token})
+
+        self._classify = jax.jit(_classify)
+        self._forward_last = jax.jit(_forward_last)
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(
+            _decode, donate_argnums=(1,) if self.donate_cache else ())
+        self.compile_count = 0
+        self._compiled_shapes = set()
+
+    # ------------------------------------------------------------------
+    def classify(self, params, tokens) -> np.ndarray:
+        """Batched classification (the paper's sentiment inference)."""
+        shape = tuple(tokens.shape)
+        if shape not in self._compiled_shapes:
+            self._compiled_shapes.add(shape)
+            self.compile_count += 1
+        logits = self._classify(params, jnp.asarray(tokens))
+        return np.asarray(jnp.argmax(logits, axis=-1))
+
+    def classify_logits(self, params, tokens) -> np.ndarray:
+        return np.asarray(self._classify(params, jnp.asarray(tokens)))
+
+    # ------------------------------------------------------------------
+    def generate(self, params, tokens, *, max_new_tokens: int = 16,
+                 temperature: float = 0.0, seed: int = 0,
+                 max_len: Optional[int] = None) -> np.ndarray:
+        """Greedy/temperature generation. tokens: (B, S) -> (B, S+new)."""
+        tokens = jnp.asarray(tokens)
+        b, s = tokens.shape
+        logits, cache = self._prefill(params, {"tokens": tokens})
+        key = jax.random.PRNGKey(seed)
+        outs = [tokens]
+        tok = sample(logits, key, temperature=temperature)[:, None]
+        for i in range(max_new_tokens - 1):
+            outs.append(tok)
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(params, cache, tok)
+            tok = sample(logits, sub, temperature=temperature)[:, None]
+        outs.append(tok)
+        return np.asarray(jnp.concatenate(outs, axis=1))
+
+
+def timed(fn, *args, **kwargs) -> Tuple[Any, float]:
+    """Run fn with block_until_ready timing; returns (result, seconds)."""
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0

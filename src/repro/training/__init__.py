@@ -1,0 +1,4 @@
+"""Training substrate: optimizers, train-step builder, checkpointing."""
+from repro.training import checkpoint  # noqa: F401
+from repro.training.optimizer import Adafactor, AdamW, constant, warmup_cosine  # noqa: F401
+from repro.training.train_step import make_loss_fn, make_train_step  # noqa: F401

@@ -1,0 +1,103 @@
+"""Checkpointing: atomic save/restore of params + optimizer + data cursor.
+
+Fault-tolerance contract (used by launch/train.py and the orchestrator):
+  * saves are atomic (write to tmp dir, fsync, rename) — a crash mid-save
+    never corrupts the latest checkpoint;
+  * the manifest records step, data cursor, and RNG so restart resumes
+    bit-exact into the same batch sequence;
+  * retention keeps the last N checkpoints for rollback.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, state: dict, *, keep: int = 3,
+         extra: Optional[dict] = None) -> str:
+    """state: arbitrary pytree dict (params/opt_state/...). Returns path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves, treedef = _flatten(state)
+    # np.savez can't round-trip bfloat16: store raw bytes + dtype manifest
+    arrs = {}
+    dtypes = []
+    for i, l in enumerate(leaves):
+        arr = np.asarray(l)
+        dtypes.append({"dtype": str(arr.dtype), "shape": list(arr.shape)})
+        arrs[f"leaf_{i}"] = arr.view(np.uint8) if arr.dtype == "bfloat16" \
+            else arr
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrs)
+    manifest = {
+        "step": step,
+        "n_leaves": len(leaves),
+        "treedef": str(treedef),
+        "dtypes": dtypes,
+        "time": time.time(),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, final)  # atomic on POSIX
+
+    _retain(ckpt_dir, keep)
+    return final
+
+
+def _retain(ckpt_dir: str, keep: int):
+    ckpts = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_")
+                   and not d.endswith(".tmp"))
+    for d in ckpts[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    ckpts = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_")
+                   and not d.endswith(".tmp"))
+    if not ckpts:
+        return None
+    return int(ckpts[-1].split("_")[1])
+
+
+def restore(ckpt_dir: str, like: Any, step: Optional[int] = None):
+    """Restore into the structure of ``like``. Returns (state, manifest)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves, treedef = _flatten(like)
+    assert manifest["n_leaves"] == len(leaves), (
+        f"checkpoint has {manifest['n_leaves']} leaves, expected "
+        f"{len(leaves)} — structure mismatch")
+    import ml_dtypes  # noqa: F401  (registers bfloat16)
+    new_leaves = []
+    for i, l in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        meta = manifest["dtypes"][i]
+        if meta["dtype"] == "bfloat16":
+            arr = arr.view(np.dtype("bfloat16")).reshape(meta["shape"])
+        new_leaves.append(jax.numpy.asarray(arr).astype(l.dtype))
+    return jax.tree.unflatten(treedef, new_leaves), manifest

@@ -1,0 +1,164 @@
+"""Optimizers in pure JAX: AdamW (fp32 master + moments) and Adafactor.
+
+Optimizer state mirrors the parameter tree, so the FSDP PartitionSpecs
+apply leaf-for-leaf (ZeRO-3: params, grads, and moments all sharded over
+the "data" axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  final_frac: float = 0.1) -> Callable:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def constant(base_lr: float) -> Callable:
+    return lambda step: jnp.full((), base_lr, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    schedule: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(f32, params),
+            "v": jax.tree.map(f32, params),
+            "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        """grads fp32; returns (new_params_in_param_dtype, new_state, stats)."""
+        step = state["step"] + 1
+        gnorm = global_norm(grads)
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        lr = self.schedule(step)
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                             state["m"], grads)
+        new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                             state["v"], grads)
+
+        def upd(master, m, v):
+            mh = m / c1
+            vh = v / c2
+            return master - lr * (mh / (jnp.sqrt(vh) + self.eps)
+                                  + self.weight_decay * master)
+
+        new_master = jax.tree.map(upd, state["master"], new_m, new_v)
+        new_params = jax.tree.map(
+            lambda mp, p: mp.astype(p.dtype), new_master, params)
+        new_state = {"m": new_m, "v": new_v, "master": new_master,
+                     "step": step}
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+    def state_specs(self, param_spec_tree):
+        """PartitionSpec tree for the optimizer state (mirrors params)."""
+        from jax.sharding import PartitionSpec as P
+        return {
+            "m": param_spec_tree,
+            "v": param_spec_tree,
+            "master": param_spec_tree,
+            "step": P(),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (memory-lean option for the 340B-class train cells)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    schedule: Callable
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    def init(self, params):
+        def rowcol(p):
+            if p.ndim >= 2:
+                return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "col": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                         jnp.float32)}
+            return {"full": jnp.zeros(p.shape, jnp.float32)}
+        return {"factored": jax.tree.map(rowcol, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        beta = 1.0 - step.astype(jnp.float32) ** (-self.decay)
+        lr = self.schedule(step)
+
+        def upd(g, f, p):
+            g2 = g * g + self.eps
+            if "full" in f:
+                nf = {"full": beta * f["full"] + (1 - beta) * g2}
+                u = g * jax.lax.rsqrt(nf["full"])
+            else:
+                nr = beta * f["row"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                nc = beta * f["col"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                nf = {"row": nr, "col": nc}
+                # V ≈ nr ⊗ nc / mean(nr): u = g / sqrt(V)
+                r_fac = jax.lax.rsqrt(
+                    nr / jnp.maximum(jnp.mean(nr, axis=-1, keepdims=True),
+                                     self.eps))
+                c_fac = jax.lax.rsqrt(jnp.maximum(nc, self.eps))
+                u = g * r_fac[..., None] * c_fac[..., None, :]
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms_u / self.clip_threshold)
+            newp = p.astype(jnp.float32) - lr * u \
+                - lr * self.weight_decay * p.astype(jnp.float32)
+            return newp.astype(p.dtype), nf
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_f = tdef.flatten_up_to(state["factored"])
+        outs = [upd(g, f, p) for g, f, p in zip(flat_g, flat_f, flat_p)]
+        new_params = tdef.unflatten([o[0] for o in outs])
+        new_f = tdef.unflatten([o[1] for o in outs])
+        return new_params, {"factored": new_f, "step": step}, \
+            {"grad_norm": global_norm(grads), "lr": lr}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))

@@ -1,0 +1,30 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see the default single
+CPU device. Multi-device tests (dist/dryrun) spawn subprocesses that set
+--xla_force_host_platform_device_count themselves.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def run_in_subprocess(code: str, n_devices: int = 8, timeout: int = 600):
+    """Run a python snippet with N host devices; returns stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={n_devices}")
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=timeout)
+    assert out.returncode == 0, f"subprocess failed:\n{out.stderr[-4000:]}"
+    return out.stdout

@@ -1,0 +1,148 @@
+"""Orchestrator invariants: exactly-once, concurrency cap, retries under
+injected faults, straggler speculation, elastic scaling, resume.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ArtifactStore, BatchJob, ElasticPolicy,
+                        FaultInjector, LatencyModel, MonolithicConfig,
+                        MonolithicRunner, Orchestrator, OrchestratorConfig,
+                        ServerlessFunction, decompose)
+from repro.data.pipeline import DatasetRef
+
+
+def make_setup(n_items=1000, batch_size=50, per_item_s=0.01):
+    store = ArtifactStore()
+    job = BatchJob(job_id="t", dataset=DatasetRef("d", n_items, 16, 100),
+                   model_ref="", batch_size=batch_size)
+    chunks = decompose(job)
+    lat = LatencyModel(cold_start_s=0.5, per_item_s=per_item_s)
+
+    def mk(i):
+        return ServerlessFunction(i, store, lat)
+
+    return store, job, chunks, mk
+
+
+def test_all_chunks_committed_exactly_once():
+    store, job, chunks, mk = make_setup()
+    orch = Orchestrator(store, OrchestratorConfig(max_concurrency=10))
+    report = orch.run(job, chunks, mk)
+    assert report.extra["committed"] == len(chunks)
+    commits = [e for e in orch.events if e["kind"] == "commit"]
+    assert len(commits) == len(chunks)
+    assert len({e["chunk"] for e in commits}) == len(chunks)
+
+
+def test_concurrency_cap_respected():
+    store, job, chunks, mk = make_setup()
+    cap = 7
+    orch = Orchestrator(store, OrchestratorConfig(max_concurrency=cap))
+    orch.run(job, chunks, mk)
+    # replay the event log and track concurrent tasks
+    active = 0
+    peak = 0
+    for e in orch.events:
+        if e["kind"] == "start":
+            active += 1
+            peak = max(peak, active)
+        elif e["kind"] in ("commit", "crash", "duplicate_result",
+                           "cancel_duplicate"):
+            active -= 1
+    assert peak <= cap
+
+
+def test_parallel_is_faster_than_monolithic():
+    store, job, chunks, mk = make_setup(n_items=2000)
+    par = Orchestrator(store, OrchestratorConfig(max_concurrency=40)).run(
+        job, chunks, mk)
+    store2, job2, chunks2, mk2 = make_setup(n_items=2000)
+    mono = MonolithicRunner(store2, MonolithicConfig()).run(
+        job2, chunks2, mk2)
+    assert par.wall_time_s < mono.wall_time_s / 5
+
+
+def test_retries_recover_from_crashes():
+    store, job, chunks, mk = make_setup(n_items=500)
+    inj = FaultInjector(seed=1, crash_prob=0.3)
+    orch = Orchestrator(
+        store, OrchestratorConfig(max_concurrency=10, retry_max_attempts=8),
+        injector=inj)
+    report = orch.run(job, chunks, mk)
+    assert report.n_crashes > 0, "injector should have fired"
+    assert report.extra["committed"] == len(chunks)
+    assert not report.extra["failed_chunks"]
+    assert report.n_retries >= report.n_crashes - len(
+        report.extra["failed_chunks"])
+
+
+def test_chunk_fails_after_max_attempts():
+    store, job, chunks, mk = make_setup(n_items=100, batch_size=50)
+    inj = FaultInjector(seed=2, crash_prob=1.0)  # everything crashes
+    orch = Orchestrator(
+        store, OrchestratorConfig(max_concurrency=4, retry_max_attempts=2),
+        injector=inj)
+    report = orch.run(job, chunks, mk)
+    assert set(report.extra["failed_chunks"]) == {c.chunk_id for c in chunks}
+    assert report.extra["committed"] == 0
+
+
+def test_speculation_beats_stragglers():
+    store, job, chunks, mk = make_setup(n_items=1000)
+    inj = FaultInjector(seed=3, straggler_prob=0.1, straggler_factor=20.0)
+    cfg = OrchestratorConfig(max_concurrency=10, speculation_factor=3.0,
+                             speculation_min_done=3)
+    orch = Orchestrator(store, cfg, injector=inj)
+    report = orch.run(job, chunks, mk)
+    assert report.extra["committed"] == len(chunks)
+    assert report.n_speculative > 0, "stragglers should trigger speculation"
+    # makespan must beat the worst-case straggler serial tail
+    base = 0.5 + 50 * 0.01
+    assert report.wall_time_s < len(chunks) * base
+
+
+def test_elastic_scales_up():
+    store, job, chunks, mk = make_setup(n_items=5000)
+    cfg = OrchestratorConfig(
+        max_concurrency=10,
+        elastic=ElasticPolicy(min_concurrency=10, max_concurrency=200,
+                              scale_step=50))
+    orch = Orchestrator(store, cfg)
+    report = orch.run(job, chunks, mk)
+    ups = [e for e in orch.events if e["kind"] == "scale_up"]
+    assert ups, "queue depth should trigger scale-up"
+    assert report.extra["final_concurrency"] >= 10
+    assert report.extra["committed"] == len(chunks)
+
+
+def test_resume_skips_committed_chunks():
+    store, job, chunks, mk = make_setup(n_items=500)
+    orch = Orchestrator(store, OrchestratorConfig(max_concurrency=10))
+    orch.run(job, chunks[:5], mk)  # partial run commits 5 chunks
+    orch2 = Orchestrator(store, OrchestratorConfig(max_concurrency=10))
+    report = orch2.run(job, chunks, mk, resume=True)
+    assert report.n_invocations == len(chunks) - 5
+    resumed = [e for e in orch2.events if e["kind"] == "resume"]
+    assert resumed and resumed[0]["skipped"] == 5
+
+
+def test_monolithic_chains_on_time_budget():
+    store, job, chunks, mk = make_setup(n_items=10_000, per_item_s=0.05)
+    # 50 items * 0.05 = 2.5 s/batch; budget 30 s -> ~11 batches/incarnation
+    runner = MonolithicRunner(
+        store, MonolithicConfig(function_budget_s=30.0))
+    report = runner.run(job, chunks, mk)
+    assert report.extra["completed_chunks"] == len(chunks)
+    assert report.n_invocations > 5, "should have chained invocations"
+    chains = [e for e in runner.events if e["kind"] == "chain"]
+    assert len(chains) == report.n_invocations - 1
+
+
+def test_monolithic_crash_resumes_from_cursor():
+    store, job, chunks, mk = make_setup(n_items=500)
+    inj = FaultInjector(seed=4, crash_prob=0.5, max_crashes=3)
+    runner = MonolithicRunner(store, MonolithicConfig(), injector=inj)
+    report = runner.run(job, chunks, mk)
+    assert report.extra["completed_chunks"] == len(chunks), \
+        "all chunks must complete despite crashes (cursor resume)"
+    assert 1 <= report.n_crashes <= 3

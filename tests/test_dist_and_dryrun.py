@@ -1,0 +1,199 @@
+"""Distribution tests on a multi-device host mesh (subprocess: these need
+--xla_force_host_platform_device_count, which must be set before jax
+init; the main pytest process keeps its default single device).
+"""
+import textwrap
+
+import pytest
+
+from conftest import run_in_subprocess
+
+
+@pytest.mark.slow
+def test_seq_sharded_decode_matches_reference():
+    out = run_in_subprocess(textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.dist import mesh_context
+        from repro.dist.collectives import seq_sharded_write_decode
+        from repro.kernels.decode_attention.ref import decode_attention_ref
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        B, S, H, KV, D = 4, 64, 8, 2, 32
+        key = jax.random.PRNGKey(0)
+        ks = jax.random.split(key, 5)
+        q = jax.random.normal(ks[0], (B,1,H,D))
+        kn = jax.random.normal(ks[1], (B,1,KV,D))
+        vn = jax.random.normal(ks[2], (B,1,KV,D))
+        kc = jax.random.normal(ks[3], (B,S,KV,D))
+        vc = jax.random.normal(ks[4], (B,S,KV,D))
+        length = jnp.int32(37)
+        with mesh_context(mesh):
+            shc = NamedSharding(mesh, P(("data",), "model", None, None))
+            rep = NamedSharding(mesh, P(("data",), None, None, None))
+            f = jax.jit(lambda *a: seq_sharded_write_decode(*a[:5], a[5]),
+                        in_shardings=(rep, rep, rep, shc, shc,
+                                      NamedSharding(mesh, P())),
+                        out_shardings=(rep, shc, shc))
+            o, nk, nv = f(q, kn, vn, kc, vc, length)
+        kc2 = kc.at[:, 37].set(kn[:, 0]); vc2 = vc.at[:, 37].set(vn[:, 0])
+        oref = decode_attention_ref(q[:, 0], kc2, vc2, length)[:, None]
+        assert float(jnp.max(jnp.abs(o - oref))) < 1e-5
+        assert float(jnp.max(jnp.abs(np.array(nk) - np.array(kc2)))) == 0.0
+        print("SEQ_SHARD_OK")
+    """), n_devices=8)
+    assert "SEQ_SHARD_OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_train_step_matches_single_device():
+    """pjit-sharded train step == single-device train step (same math)."""
+    out = run_in_subprocess(textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import configs
+        from repro.dist import context as dctx, sharding as shd
+        from repro.models import RunConfig, build
+        from repro.training.optimizer import AdamW, constant
+        from repro.training.train_step import make_train_step
+
+        cfg = configs.smoke("qwen2-7b")
+        model = build(cfg)
+        run = RunConfig()
+        params = model.init(jax.random.PRNGKey(0))
+        opt = AdamW(schedule=constant(1e-3))
+        opt_state = opt.init(params)
+        key = jax.random.PRNGKey(1)
+        batch = {"tokens": jax.random.randint(key, (8, 16), 0,
+                                              cfg.vocab_size),
+                 "labels": jax.random.randint(key, (8, 16), 0,
+                                              cfg.vocab_size)}
+        # single device
+        p1, o1, m1 = jax.jit(make_train_step(model, run, opt))(
+            params, opt_state, batch)
+        # sharded
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        with dctx.mesh_context(mesh):
+            p_sh = shd.param_shardings(model.param_specs, "fsdp_tp", mesh)
+            opt_sh = {"m": p_sh, "v": p_sh, "master": p_sh,
+                      "step": NamedSharding(mesh, P())}
+            in_sh = shd.input_shardings(
+                jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape,
+                                                            x.dtype),
+                             batch), mesh)
+            f = jax.jit(make_train_step(model, run, opt),
+                        in_shardings=(p_sh, opt_sh, in_sh))
+            p2, o2, m2 = f(params, opt_state, batch)
+        assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-2, \
+            (float(m1["loss"]), float(m2["loss"]))
+        d = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+        assert d < 0.1, d
+        print("SHARDED_TRAIN_OK")
+    """), n_devices=8)
+    assert "SHARDED_TRAIN_OK" in out
+
+
+@pytest.mark.slow
+def test_dryrun_machinery_on_host_mesh():
+    """The dryrun cell runner end-to-end on a small mesh + smoke config."""
+    out = run_in_subprocess(textwrap.dedent("""
+        import dataclasses, jax
+        from repro import configs
+        from repro.dist import context as dctx, sharding as shd
+        from repro.launch import hlo_analysis
+        from repro.models import RunConfig, build
+        from repro.models.model_zoo import SHAPES
+        cfg = configs.smoke("gemma2-27b")
+        model = build(cfg)
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        run = RunConfig()
+        with dctx.mesh_context(mesh):
+            import jax.numpy as jnp
+            inputs = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
+            p_abs = model.abstract()
+            p_sh = shd.param_shardings(model.param_specs, "tp", mesh)
+            in_sh = shd.input_shardings(inputs, mesh)
+            fn = jax.jit(lambda p, b: model.forward(run, p, b),
+                         in_shardings=(p_sh, in_sh))
+            compiled = fn.lower(p_abs, inputs).compile()
+        an = hlo_analysis.analyze_hlo(compiled.as_text())
+        assert an.flops > 0
+        assert an.hbm_bytes > 0
+        ma = compiled.memory_analysis()
+        assert ma.argument_size_in_bytes > 0
+        print("DRYRUN_OK", an.n_dots)
+    """), n_devices=8)
+    assert "DRYRUN_OK" in out
+
+
+@pytest.mark.slow
+@pytest.mark.xfail(
+    reason="upstream XLA-CPU bug: compiling a dtype-cast psum inside a "
+           "partially-manual shard_map crashes the compiler (F... Invalid "
+           "binary instruction opcode copy). The path traces correctly "
+           "(test_grad_compression_traces) and targets TPU DCN.",
+    run=False)
+def test_grad_compression_pod_axis():
+    out = run_in_subprocess(textwrap.dedent("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import configs
+        from repro.dist import context as dctx, sharding as shd
+        from repro.models import RunConfig, build
+        from repro.training.optimizer import AdamW, constant
+        from repro.training.train_step import make_train_step
+        cfg = configs.smoke("qwen2-7b")
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        opt = AdamW(schedule=constant(1e-3))
+        opt_state = opt.init(params)
+        key = jax.random.PRNGKey(1)
+        batch = {"tokens": jax.random.randint(key, (8, 16), 0, 100),
+                 "labels": jax.random.randint(key, (8, 16), 0, 100)}
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        with dctx.mesh_context(mesh):
+            run = RunConfig(grad_compression="int8")
+            f = jax.jit(make_train_step(model, run, opt, mesh=mesh))
+            p2, o2, m2 = f(params, opt_state, batch)
+        assert bool(jnp.isfinite(m2["loss"]))
+        print("GRAD_COMPRESS_OK")
+    """), n_devices=8)
+    assert "GRAD_COMPRESS_OK" in out
+
+
+@pytest.mark.slow
+def test_grad_compression_traces():
+    """The int8/bf16 compressed-gradient path traces to a valid jaxpr with
+    the pod-axis psum present (compile blocked by an XLA-CPU bug — xfail
+    above; on TPU this is the cross-DCN reduction path)."""
+    out = run_in_subprocess(textwrap.dedent("""
+        import jax, jax.numpy as jnp
+        from repro import configs
+        from repro.dist import context as dctx
+        from repro.models import RunConfig, build
+        from repro.training.optimizer import AdamW, constant
+        from repro.training.train_step import make_train_step
+        cfg = configs.smoke("qwen2-7b")
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        opt = AdamW(schedule=constant(1e-3))
+        opt_state = opt.init(params)
+        key = jax.random.PRNGKey(1)
+        batch = {"tokens": jax.random.randint(key, (8, 16), 0, 100),
+                 "labels": jax.random.randint(key, (8, 16), 0, 100)}
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        with dctx.mesh_context(mesh):
+            for method in ("int8", "bf16"):
+                run = RunConfig(grad_compression=method)
+                f = jax.jit(make_train_step(model, run, opt, mesh=mesh))
+                jaxpr = str(f.trace(params, opt_state, batch).jaxpr)
+                assert "psum" in jaxpr and "shard_map" in jaxpr, method
+        print("TRACE_OK")
+    """), n_devices=8)
+    assert "TRACE_OK" in out

@@ -1,0 +1,166 @@
+"""End-to-end behaviour: the paper's pipeline on REAL compute (tiny scale),
+training loss descent, checkpoint restart, serving engine.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import (ArtifactStore, BatchJob, LatencyModel,
+                        MonolithicConfig, MonolithicRunner, Orchestrator,
+                        OrchestratorConfig, ServerlessFunction, decompose,
+                        merge)
+from repro.data import TrainLoader, imdb_reviews
+from repro.data.pipeline import DatasetRef
+from repro.models import RunConfig, build
+from repro.serving import Engine
+from repro.training import checkpoint
+from repro.training.optimizer import AdamW, constant
+from repro.training.train_step import make_train_step
+
+RUN = RunConfig(cache_pad=8)
+
+
+@pytest.fixture(scope="module")
+def sentiment_setup():
+    """Tiny DistilBERT-family classifier + tiny IMDb, real inference."""
+    cfg = configs.smoke("distilbert-imdb")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens, labels = imdb_reviews(n=200, seq_len=32, vocab=cfg.vocab_size,
+                                  seed=0)
+    return cfg, model, params, tokens, labels
+
+
+def test_parallel_equals_monolithic_predictions(sentiment_setup):
+    """The decomposed pipeline must produce EXACTLY the monolithic
+    predictions (the paper's transformation is semantics-preserving)."""
+    cfg, model, params, tokens, labels = sentiment_setup
+    engine = Engine(model, RUN)
+    direct = engine.classify(params, tokens)  # monolithic ground truth
+
+    store = ArtifactStore()
+    store.put_tree("models/clf", params)
+    job = BatchJob("e2e", DatasetRef("imdb", len(tokens), 32,
+                                     cfg.vocab_size), "models/clf", 32)
+    chunks = decompose(job)
+    lat = LatencyModel(cold_start_s=0.01, per_item_s=None)  # REAL compute
+
+    def mk(i):
+        return ServerlessFunction(i, store, lat, engine=engine,
+                                  params_ref="models/clf")
+
+    orch = Orchestrator(store, OrchestratorConfig(max_concurrency=4))
+    report = orch.run(job, chunks, mk, data={"tokens": tokens})
+    assert report.extra["committed"] == len(chunks)
+    merged = merge(store, job, chunks)
+    np.testing.assert_array_equal(merged, direct)
+    assert report.cost_usd > 0
+
+
+def test_trained_classifier_beats_chance(sentiment_setup):
+    """Train briefly on the planted-signal IMDb; accuracy must rise."""
+    cfg, model, _, tokens, labels = sentiment_setup
+    params = model.init(jax.random.PRNGKey(1))
+    opt = AdamW(schedule=constant(3e-3), weight_decay=0.0)
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(model, RUN, opt))
+    loader = TrainLoader(tokens, labels, batch=32, seed=0)
+    losses = []
+    for _ in range(30):
+        b = loader.next_batch()
+        params, opt_state, m = step(params, opt_state, b)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.9, f"loss didn't descend: {losses[:3]} -> {losses[-3:]}"
+    engine = Engine(model, RUN)
+    preds = engine.classify(params, tokens)
+    acc = float((preds == labels).mean())
+    assert acc > 0.6, f"accuracy {acc} not above chance"
+
+
+def test_lm_train_loss_descends():
+    cfg = configs.smoke("qwen2-7b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(schedule=constant(1e-3), weight_decay=0.0)
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(model, RUN, opt))
+    key = jax.random.PRNGKey(0)
+    # deterministic bigram task: next = (tok*7+1) % V
+    toks = jax.random.randint(key, (8, 33), 0, cfg.vocab_size)
+    toks = toks.at[:, 1:].set((toks[:, :-1] * 7 + 1) % cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    first = last = None
+    for i in range(40):
+        params, opt_state, m = step(params, opt_state, batch)
+        first = first if first is not None else float(m["loss"])
+        last = float(m["loss"])
+    assert last < first * 0.7, f"{first} -> {last}"
+
+
+def test_checkpoint_roundtrip_and_resume(tmp_path):
+    cfg = configs.smoke("qwen2-7b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(schedule=constant(1e-3))
+    opt_state = opt.init(params)
+    loader = TrainLoader(np.zeros((64, 8), np.int32),
+                         np.zeros((64, 8), np.int32), batch=8, seed=3)
+    loader.next_batch(), loader.next_batch()
+
+    path = checkpoint.save(str(tmp_path), 2,
+                           {"params": params, "opt": opt_state},
+                           extra={"loader": loader.state()})
+    assert os.path.exists(path)
+
+    like = {"params": jax.tree.map(jnp.zeros_like, params),
+            "opt": jax.tree.map(jnp.zeros_like, opt_state)}
+    state, manifest = checkpoint.restore(str(tmp_path), like)
+    assert manifest["step"] == 2
+    for a, b in zip(jax.tree.leaves(state["params"]),
+                    jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # loader resume reproduces the same next batch
+    l2 = TrainLoader(np.zeros((64, 8), np.int32),
+                     np.zeros((64, 8), np.int32), batch=8, seed=3)
+    l2.restore(manifest["extra"]["loader"])
+    assert l2.cursor == loader.cursor
+
+
+def test_checkpoint_retention(tmp_path):
+    state = {"x": jnp.ones((4,))}
+    for s in range(6):
+        checkpoint.save(str(tmp_path), s, state, keep=3)
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(kept) == 3
+    assert checkpoint.latest_step(str(tmp_path)) == 5
+
+
+def test_engine_generate():
+    cfg = configs.smoke("qwen2-7b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, RUN)
+    prompt = np.ones((2, 8), np.int32)
+    out = engine.generate(params, prompt, max_new_tokens=5)
+    assert out.shape == (2, 13)
+    assert (out[:, :8] == prompt).all()
+    assert (out >= 0).all() and (out < cfg.vocab_size).all()
+
+
+def test_engine_generate_greedy_matches_forward():
+    """Greedy generation step i must equal argmax of teacher-forced logits."""
+    cfg = configs.smoke("qwen2-7b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, RUN)
+    prompt = np.asarray(jax.random.randint(jax.random.PRNGKey(4), (1, 8), 0,
+                                           cfg.vocab_size))
+    out = engine.generate(params, prompt, max_new_tokens=3)
+    logits, _ = model.forward(RUN, params, {"tokens": jnp.asarray(out)})
+    for i in range(8, 11):
+        want = int(jnp.argmax(logits[0, i - 1]))
+        assert int(out[0, i]) == want

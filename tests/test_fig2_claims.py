@@ -1,0 +1,52 @@
+"""Paper-claim validation (Fig 2) through the calibrated simulator —
+the reproduction's acceptance tests.
+"""
+import pytest
+
+from benchmarks.fig2 import PAPER, rows, validate
+from repro.core.simulator import CaseStudyConfig, run_monolithic, run_parallel
+
+
+@pytest.fixture(scope="module")
+def sweep():
+    return rows(CaseStudyConfig(), batch_sizes=[50, 100, 500, 625, 1000])
+
+
+def test_all_paper_claims(sweep):
+    checks = validate(sweep)
+    failed = [k for k, ok in checks.items() if not ok]
+    assert not failed, f"claim checks failed: {failed}"
+
+
+def test_monolithic_absolute_times_close_to_paper(sweep):
+    """Calibration sanity: within 5% of the paper's monolithic endpoints."""
+    by = {r["batch_size"]: r for r in sweep}
+    assert abs(by[50]["mono_time_min"] - PAPER["mono_time_min_bs50"]) \
+        / PAPER["mono_time_min_bs50"] < 0.05
+    assert abs(by[1000]["mono_time_min"] - PAPER["mono_time_min_bs1000"]) \
+        / PAPER["mono_time_min_bs1000"] < 0.05
+
+
+def test_parallel_bs50_time_close_to_paper(sweep):
+    by = {r["batch_size"]: r for r in sweep}
+    assert abs(by[50]["par_time_min"] - PAPER["par_time_min_bs50"]) \
+        / PAPER["par_time_min_bs50"] < 0.25
+
+
+def test_conservation_decomposition_preserves_billed_compute():
+    """Chip/GB-seconds of pure compute are conserved across modes."""
+    cs = CaseStudyConfig()
+    mono = run_monolithic(cs, 250)
+    par = run_parallel(cs, 250)
+    mono_compute = cs.n_items * cs.per_item_s
+    # both modes' billed time >= pure compute; overhead < 25%
+    assert mono.total_billed_s >= mono_compute
+    assert par.total_billed_s >= mono_compute
+    assert par.total_billed_s < mono_compute * 1.25
+    assert mono.total_billed_s < mono_compute * 1.25
+
+
+def test_paper_batch_size_table_complete():
+    from repro.core.simulator import PAPER_BATCH_SIZES
+    assert PAPER_BATCH_SIZES == [50, 100, 125, 200, 250, 333, 500, 625,
+                                 1000]

@@ -1,0 +1,88 @@
+"""HLO analyzer unit tests: scan-trip multiplication, dot FLOPs, shapes."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import (analyze_hlo, parse_computations,
+                                       shape_bytes, shape_elems)
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[8,4]{1,0}") == 128
+    assert shape_bytes("bf16[2,3,4]{2,1,0}") == 48
+    assert shape_bytes("pred[]") == 1
+    assert shape_bytes("(f32[4], s32[2])") == 24
+    assert shape_elems("f32[8,4]{1,0}") == 32
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    L, B, D = 4, 8, 16
+
+    def scanned(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        x, _ = jax.lax.scan(body, x, ws)
+        return x
+
+    x = jax.ShapeDtypeStruct((B, D), jnp.float32)
+    ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    compiled = jax.jit(scanned).lower(x, ws).compile()
+    an = analyze_hlo(compiled.as_text())
+    assert an.flops == pytest.approx(2 * B * D * D * L, rel=0.01)
+    assert list(an.while_trips.values()) == [L]
+
+
+def test_nested_scan_trips_multiply():
+    L1, L2, D = 3, 5, 8
+
+    def inner(x, ws):
+        def body(c, w):
+            return c @ w, None
+        return jax.lax.scan(body, x, ws)[0]
+
+    def outer(x, ws2):
+        def body(c, ws):
+            return inner(c, ws), None
+        return jax.lax.scan(body, x, ws2)[0]
+
+    x = jax.ShapeDtypeStruct((4, D), jnp.float32)
+    ws2 = jax.ShapeDtypeStruct((L1, L2, D, D), jnp.float32)
+    compiled = jax.jit(outer).lower(x, ws2).compile()
+    an = analyze_hlo(compiled.as_text())
+    assert an.flops == pytest.approx(2 * 4 * D * D * L1 * L2, rel=0.01)
+
+
+def test_unrolled_matches_scanned():
+    L, B, D = 4, 8, 16
+    x = jax.ShapeDtypeStruct((B, D), jnp.float32)
+    ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+
+    def unrolled(x, ws):
+        for i in range(L):
+            x = jnp.tanh(x @ ws[i])
+        return x
+
+    def scanned(x, ws):
+        return jax.lax.scan(lambda c, w: (jnp.tanh(c @ w), None), x, ws)[0]
+
+    a1 = analyze_hlo(jax.jit(unrolled).lower(x, ws).compile().as_text())
+    a2 = analyze_hlo(jax.jit(scanned).lower(x, ws).compile().as_text())
+    assert a1.flops == pytest.approx(a2.flops, rel=0.01)
+
+
+def test_embedding_gather_bytes_not_full_table():
+    """Gather reads rows, not the whole table (slice-aware accounting)."""
+    V, D, B = 50_000, 64, 4
+    table = jax.ShapeDtypeStruct((V, D), jnp.float32)
+    idx = jax.ShapeDtypeStruct((B,), jnp.int32)
+    compiled = jax.jit(lambda t, i: t[i]).lower(table, idx).compile()
+    an = analyze_hlo(compiled.as_text())
+    assert an.hbm_bytes < V * D * 4 * 0.5, (
+        f"gather counted {an.hbm_bytes} bytes — looks like the full table")
+
+
+def test_entry_found():
+    compiled = jax.jit(lambda x: x + 1).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32)).compile()
+    comps = parse_computations(compiled.as_text())
+    assert "__entry__" in comps

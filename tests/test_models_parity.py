@@ -1,0 +1,148 @@
+"""Numerical parity tests between independent implementations:
+SSD chunked vs naive recurrence, MoE dispatch impls, chunked attention.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.common import (LayerSpec, ModelConfig, MoEConfig,
+                                 SSMConfig, init_params)
+
+
+def tiny_cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=2, d_model=32, n_heads=4,
+                n_kv_heads=2, head_dim=8, d_ff=64, vocab_size=64,
+                pattern=(LayerSpec("attn", "dense"),))
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# SSD: chunked scan == naive token-by-token recurrence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seq,chunk", [(16, 8), (24, 8), (32, 16)])
+def test_ssd_chunked_matches_naive(seq, chunk):
+    sc = SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=8, chunk=chunk)
+    cfg = tiny_cfg(ssm=sc)
+    p = init_params(jax.random.PRNGKey(0), S.ssm_specs(cfg, sc))
+    p = jax.tree.map(lambda x: x.astype(jnp.float32), p)
+    u = jax.random.normal(jax.random.PRNGKey(1), (2, seq, cfg.d_model),
+                          jnp.float32) * 0.5
+    fast = S.ssm_forward(cfg, sc, p, u)
+    slow = S.ssm_forward_naive(cfg, sc, p, u)
+    # chunked SSD computes exp(cum_i - cum_j) where the recurrence takes
+    # products of exp() — fp32 accumulation-order noise, not a logic diff
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(slow),
+                               atol=1e-2, rtol=3e-3)
+
+
+def test_ssd_prefill_state_matches_decode_path():
+    """state after prefill == state after naive decode over same tokens."""
+    sc = SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=8, chunk=8)
+    cfg = tiny_cfg(ssm=sc)
+    p = init_params(jax.random.PRNGKey(0), S.ssm_specs(cfg, sc))
+    u = jax.random.normal(jax.random.PRNGKey(1), (1, 16, cfg.d_model),
+                          jnp.float32) * 0.5
+    _, cache = S.ssm_forward(cfg, sc, p, u, return_state=True)
+    # replay through decode
+    b = 1
+    dc = {
+        "conv_x": jnp.zeros((b, 3, sc.d_inner(cfg.d_model)), jnp.bfloat16),
+        "conv_B": jnp.zeros((b, 3, sc.d_state), jnp.bfloat16),
+        "conv_C": jnp.zeros((b, 3, sc.d_state), jnp.bfloat16),
+        "state": jnp.zeros((b, sc.n_heads(cfg.d_model), sc.head_dim,
+                            sc.d_state), jnp.float32),
+    }
+    for i in range(16):
+        _, dc = S.ssm_decode(cfg, sc, p, u[:, i:i + 1], dc)
+    np.testing.assert_allclose(np.asarray(cache["state"]),
+                               np.asarray(dc["state"]), atol=2e-2, rtol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# MoE: the three dispatch impls agree (generous capacity => no drops)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("e,k", [(8, 2), (4, 1), (16, 4)])
+def test_moe_impl_parity(e, k):
+    mc = MoEConfig(num_experts=e, top_k=k, expert_ff=64,
+                   capacity_factor=float(e))  # no drops
+    cfg = tiny_cfg(moe=mc, pattern=(LayerSpec("attn", "moe"),))
+    p = init_params(jax.random.PRNGKey(0), M.moe_specs(cfg, mc))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32), jnp.float32)
+    ys = {}
+    for impl in ["einsum", "scatter", "ragged"]:
+        ys[impl], _ = M.moe_apply(cfg, mc, p, x, impl=impl)
+    np.testing.assert_allclose(np.asarray(ys["einsum"]),
+                               np.asarray(ys["scatter"]), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ys["einsum"]),
+                               np.asarray(ys["ragged"]), atol=1e-5)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With cf=1.0 exactly balanced demand fits; skewed demand drops."""
+    mc = MoEConfig(num_experts=4, top_k=1, expert_ff=16,
+                   capacity_factor=1.0)
+    cfg = tiny_cfg(moe=mc, pattern=(LayerSpec("attn", "moe"),), d_model=8)
+    p = init_params(jax.random.PRNGKey(0), M.moe_specs(cfg, mc))
+    x = jnp.ones((1, 64, 8), jnp.float32)  # identical tokens -> one expert
+    y, aux = M.moe_apply(cfg, mc, p, x, impl="scatter")
+    assert bool(jnp.all(jnp.isfinite(y)))
+    # identical tokens all route to one expert; capacity keeps <= C of them
+    nonzero = jnp.sum(jnp.any(jnp.abs(y[0]) > 1e-9, axis=-1))
+    assert int(nonzero) <= M.capacity(mc, 64) + 4
+
+
+def test_moe_shared_expert_contributes():
+    mc = MoEConfig(num_experts=4, top_k=2, expert_ff=16, num_shared=1,
+                   shared_ff=32, capacity_factor=4.0)
+    cfg = tiny_cfg(moe=mc, pattern=(LayerSpec("attn", "moe"),))
+    p = init_params(jax.random.PRNGKey(0), M.moe_specs(cfg, mc))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32))
+    y_with, _ = M.moe_apply(cfg, mc, p, x, impl="einsum")
+    p2 = dict(p)
+    p2["shared"] = jax.tree.map(jnp.zeros_like, p["shared"])
+    y_without, _ = M.moe_apply(cfg, mc, p2, x, impl="einsum")
+    assert float(jnp.max(jnp.abs(y_with - y_without))) > 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Chunked XLA attention == dense attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mask_kind,window", [("causal", None),
+                                              ("causal", 512),
+                                              ("bidir", None)])
+def test_chunked_attention_matches_dense(mask_kind, window):
+    key = jax.random.PRNGKey(0)
+    b, s, h, kv, d = 1, 4096, 4, 2, 16  # s > 2*Q_CHUNK -> chunked path
+    q = jax.random.normal(key, (b, s, h, d))
+    k = jax.random.normal(key, (b, s, kv, d))
+    v = jax.random.normal(key, (b, s, kv, d))
+    out = A.attend_full(q, k, v, mask_kind=mask_kind, window=window)
+    ref = A._attend_dense(q, k, v, mask_kind=mask_kind, window=window,
+                          cap=None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_rope_rotation_invariant():
+    """RoPE preserves pairwise dot products under equal position shift."""
+    from repro.models.common import apply_rope
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 4, 2, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 2, 16))
+    pos = jnp.arange(4)[None]
+    q1, k1 = apply_rope(q, pos, 1e4), apply_rope(k, pos, 1e4)
+    q2, k2 = apply_rope(q, pos + 7, 1e4), apply_rope(k, pos + 7, 1e4)
+    s1 = jnp.einsum("bshd,bthd->bhst", q1, k1)
+    s2 = jnp.einsum("bshd,bthd->bhst", q2, k2)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4)

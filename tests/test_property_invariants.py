@@ -1,0 +1,138 @@
+"""Hypothesis property tests on the system's invariants:
+decomposition coverage, cost-model monotonicity/accounting, capacity,
+merge exactness, checkpoint round-trips.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ArtifactStore, AWSPriceBook, BatchJob,
+                        LatencyModel, Orchestrator, OrchestratorConfig,
+                        ServerlessFunction, coverage_ok, decompose)
+from repro.core.cost_model import TPUPriceBook
+from repro.core.job import TaskRecord, Chunk, InvokeOutcome
+from repro.data.pipeline import DatasetRef, chunk_ranges
+from repro.models.common import MoEConfig
+from repro.models.moe import capacity
+
+
+# ---------------------------------------------------------------------------
+# Decomposition
+# ---------------------------------------------------------------------------
+
+
+@given(n=st.integers(1, 100_000), bs=st.integers(1, 5_000))
+def test_chunks_partition_dataset_exactly(n, bs):
+    job = BatchJob("j", DatasetRef("d", n, 1, 1), "", bs)
+    chunks = decompose(job)
+    assert coverage_ok(chunks, n)
+    assert sum(c.n_items for c in chunks) == n
+    assert len(chunks) == -(-n // bs)  # ceil
+
+
+@given(n=st.integers(1, 10_000), bs=st.integers(1, 500))
+def test_chunk_ranges_sorted_and_tight(n, bs):
+    ranges = chunk_ranges(n, bs)
+    assert ranges[0][0] == 0 and ranges[-1][1] == n
+    for (s0, e0), (s1, e1) in zip(ranges, ranges[1:]):
+        assert e0 == s1 and e0 - s0 == bs  # only the last may be short
+
+
+# ---------------------------------------------------------------------------
+# Cost model (Eq 1 / Eq 2)
+# ---------------------------------------------------------------------------
+
+
+@given(dur=st.floats(0.001, 10_000), ram=st.floats(128, 10_240))
+def test_cost_monotone_in_duration_and_ram(dur, ram):
+    book = AWSPriceBook()
+    c = book.compute_cost(dur, ram)
+    assert c >= 0
+    assert book.compute_cost(dur * 2, ram) >= c
+    assert book.compute_cost(dur, ram * 2) >= c
+
+
+@given(dur=st.floats(0.0005, 100))
+def test_billing_quantum_rounds_up(dur):
+    book = AWSPriceBook()
+    billed = book.billed_seconds(dur)
+    assert billed >= dur - 1e-12
+    assert billed - dur <= book.billing_quantum_ms / 1000.0 + 1e-12
+
+
+@given(durs=st.lists(st.floats(0.01, 900), min_size=1, max_size=50),
+       ram=st.floats(128, 3008))
+def test_parallel_cost_geq_compute_cost(durs, ram):
+    """Eq(1) >= pure compute: requests + transitions only add cost."""
+    book = AWSPriceBook()
+    tasks = [TaskRecord(Chunk(i, 0, 1), 1, i, 0.0, d,
+                        InvokeOutcome(duration_s=d), billed_s=d)
+             for i, d in enumerate(durs)]
+    total = book.cost_parallel(tasks, ram)
+    compute = sum(book.compute_cost(d, ram) for d in durs)
+    assert total >= compute
+    overhead = total - compute
+    expected = (len(durs) * book.per_request
+                + (book.base_transitions
+                   + book.transitions_per_task * len(durs))
+                * book.per_transition)
+    assert abs(overhead - expected) < 1e-9
+
+
+@given(chip_seconds=st.floats(0, 1e9))
+def test_tpu_cost_linear(chip_seconds):
+    book = TPUPriceBook()
+    assert abs(book.cost(chip_seconds) * 2
+               - book.cost(2 * chip_seconds)) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Conservation: total billed compute ~ constant under decomposition
+# ---------------------------------------------------------------------------
+
+
+@given(bs=st.sampled_from([10, 25, 50, 100, 250]))
+@settings(deadline=None, max_examples=5)
+def test_compute_seconds_conserved_under_batch_size(bs):
+    """The paper's core insight: decomposition changes wall time, not
+    total compute-seconds (up to per-invocation overhead)."""
+    n = 1000
+    per_item = 0.01
+    store = ArtifactStore()
+    job = BatchJob("j", DatasetRef("d", n, 1, 1), "", bs)
+    lat = LatencyModel(cold_start_s=0.0, warm_start_s=0.0,
+                       invoke_overhead_s=0.0, result_write_s=0.0,
+                       per_item_s=per_item)
+    orch = Orchestrator(store, OrchestratorConfig(max_concurrency=1000))
+    report = orch.run(job, decompose(job),
+                      lambda i: ServerlessFunction(i, store, lat))
+    assert abs(report.total_billed_s - n * per_item) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# MoE capacity
+# ---------------------------------------------------------------------------
+
+
+@given(t=st.integers(1, 100_000), e=st.integers(1, 128),
+       k=st.integers(1, 8), cf=st.floats(1.0, 4.0))
+def test_capacity_bounds(t, e, k, cf):
+    mc = MoEConfig(num_experts=e, top_k=k, expert_ff=8, capacity_factor=cf)
+    c = capacity(mc, t)
+    assert c >= k                       # a token's k slots always fit
+    assert c % 4 == 0 or c == k         # lane-aligned
+    assert c * e >= cf * k * t - 4 * e  # total slots cover demand
+
+
+# ---------------------------------------------------------------------------
+# Store / merge
+# ---------------------------------------------------------------------------
+
+
+@given(keys=st.lists(st.text(min_size=1, max_size=20), min_size=1,
+                     max_size=20, unique=True))
+def test_store_idempotent_first_writer_wins(keys):
+    store = ArtifactStore()
+    for k in keys:
+        assert store.put("k/" + k, b"first", overwrite=False)
+        assert not store.put("k/" + k, b"second", overwrite=False)
+        assert store.get("k/" + k) == b"first"
