@@ -1,0 +1,203 @@
+"""Manual collectives: sequence-sharded decode attention + compressed psum.
+
+``seq_sharded_decode`` / ``seq_sharded_write_decode`` run decode attention
+over a KV cache whose SEQUENCE dim is sharded across the "model" axis.
+Each shard computes a flash-style partial softmax over its local cache
+block (running max, exp-sum, weighted values) and the shards combine with
+one pmax + two psums — the cache never materializes unsharded. The write
+variant also writes the new token's K/V into whichever shard owns global
+position ``length``, shard-locally, so SPMD can't decide to all-gather
+the cache around the update.
+
+Both fall back to the identical single-device math when there is no
+ambient mesh, the "model" axis is trivial, or the sequence doesn't divide
+— ``tests/test_collectives_ref.py`` pins that fallback against
+``decode_attention_ref``, and the 8-device subprocess test pins the
+sharded path against the same oracle.
+
+``compress_psum`` emulates an int8/bf16-compressed gradient all-reduce
+over a (DCN) mesh axis inside a partially-manual shard_map.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import compat
+from repro.dist import context as ctx
+
+NEG_INF = -1e30
+
+
+def _softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def _partial_decode(q, k_blk, v_blk, length, offset, window, cap):
+    """Flash-decode partials over one cache block.
+
+    q: (B,1,H,hd); k_blk/v_blk: (B,Sl,KV,hd); global kv position of local
+    row t is ``offset + t``. Returns (num (B,KV,G,hd), den (B,KV,G),
+    m (B,KV,G)) — all fp32 — such that softmax-attention over the union of
+    blocks is ``psum(num·e^{m-M}) / psum(den·e^{m-M})`` with M = pmax(m).
+    """
+    b, _, h, hd = q.shape
+    kv = k_blk.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, hd).astype(jnp.float32)
+    logits = jnp.einsum("bkgh,btkh->bkgt", qg,
+                        k_blk.astype(jnp.float32)) / (hd ** 0.5)
+    logits = _softcap(logits, cap)
+    pos = offset + jnp.arange(k_blk.shape[1])
+    mask = pos <= length
+    if window is not None:
+        mask = mask & (pos > length - window)
+    logits = jnp.where(mask[None, None, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1)  # (B,KV,G); NEG_INF on all-masked blocks
+    p = jnp.exp(logits - m[..., None])
+    # all-masked block: logits - m == 0 would give weight 1 — zero it out
+    p = jnp.where(mask[None, None, None, :], p, 0.0)
+    den = jnp.sum(p, axis=-1)
+    num = jnp.einsum("bkgt,btkh->bkgh", p, v_blk.astype(jnp.float32))
+    return num, den, m
+
+
+def _combine_local(q, num, den):
+    b, _, h, hd = q.shape
+    o = num / jnp.maximum(den, 1e-30)[..., None]
+    return o.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def _write_at(cache, new, index):
+    """Write ``new`` (B,1,KV,hd) at row ``index`` iff 0 <= index < Sl."""
+    sl = cache.shape[1]
+    in_range = (index >= 0) & (index < sl)
+    idx = jnp.clip(index, 0, sl - 1)
+    updated = jax.lax.dynamic_update_slice_in_dim(
+        cache, new.astype(cache.dtype), idx, axis=1)
+    return jnp.where(in_range, updated, cache)
+
+
+def _shard_plan(mesh, batch: int, seq: int):
+    """(batch_spec_entry, manual_axes) for the decode shard_maps, or None
+    when the sequence can't shard over "model"."""
+    msize = ctx.axis_size("model", mesh)
+    if mesh is None or msize <= 1 or seq % msize:
+        return None
+    dp = ctx.dp_axes(mesh)
+    dp = tuple(a for a in dp if a != "model")
+    dp_size = 1
+    for a in dp:
+        dp_size *= int(mesh.shape[a])
+    bspec = dp if (dp and batch % dp_size == 0) else None
+    manual = frozenset((bspec or ()) + ("model",))
+    return bspec, manual
+
+
+def seq_sharded_decode(q, k_cache, v_cache, length, *,
+                       window: Optional[int] = None,
+                       cap: Optional[float] = None):
+    """Decode attention over a sequence-sharded KV cache.
+
+    q: (B,1,H,hd); caches (B,S,KV,hd) with S sharded over "model";
+    returns (B,1,H,hd), batch-sharded only. Matches
+    ``decode_attention_ref(q[:, 0], k_cache, v_cache, length)[:, None]``.
+    """
+    plan = _shard_plan(ctx.get_mesh(), q.shape[0], k_cache.shape[1])
+    if plan is None:
+        num, den, _ = _partial_decode(q, k_cache, v_cache, length, 0,
+                                      window, cap)
+        return _combine_local(q, num, den)
+    bspec, manual = plan
+    mesh = ctx.get_mesh()
+    from jax.sharding import PartitionSpec as P
+    rep = P(bspec, None, None, None)
+    shc = P(bspec, "model", None, None)
+
+    def body(q, kc, vc, length):
+        off = jax.lax.axis_index("model") * kc.shape[1]
+        num, den, m = _partial_decode(q, kc, vc, length, off, window, cap)
+        m_g = jax.lax.pmax(m, "model")
+        scale = jnp.exp(m - m_g)
+        num = jax.lax.psum(num * scale[..., None], "model")
+        den = jax.lax.psum(den * scale, "model")
+        return _combine_local(q, num, den)
+
+    return compat.shard_map(
+        body, mesh=mesh, in_specs=(rep, shc, shc, P()), out_specs=rep,
+        axis_names=manual, check_vma=False)(q, k_cache, v_cache, length)
+
+
+def seq_sharded_write_decode(q, k_new, v_new, k_cache, v_cache, length, *,
+                             window: Optional[int] = None,
+                             cap: Optional[float] = None):
+    """Fused cache-write + decode attention over a sequence-sharded cache.
+
+    Writes k_new/v_new (B,1,KV,hd) at global row ``length`` — inside the
+    shard that owns it — then attends q over the updated cache (positions
+    <= length). Returns (out (B,1,H,hd), new_k_cache, new_v_cache); the
+    caches keep their (B, S/"model", KV, hd) sharding.
+    """
+    plan = _shard_plan(ctx.get_mesh(), q.shape[0], k_cache.shape[1])
+    if plan is None:
+        kc = _write_at(k_cache, k_new, length)
+        vc = _write_at(v_cache, v_new, length)
+        num, den, _ = _partial_decode(q, kc, vc, length, 0, window, cap)
+        return _combine_local(q, num, den), kc, vc
+    bspec, manual = plan
+    mesh = ctx.get_mesh()
+    from jax.sharding import PartitionSpec as P
+    rep = P(bspec, None, None, None)
+    shc = P(bspec, "model", None, None)
+
+    def body(q, kn, vn, kc, vc, length):
+        off = jax.lax.axis_index("model") * kc.shape[1]
+        kc = _write_at(kc, kn, length - off)
+        vc = _write_at(vc, vn, length - off)
+        num, den, m = _partial_decode(q, kc, vc, length, off, window, cap)
+        m_g = jax.lax.pmax(m, "model")
+        scale = jnp.exp(m - m_g)
+        num = jax.lax.psum(num * scale[..., None], "model")
+        den = jax.lax.psum(den * scale, "model")
+        return _combine_local(q, num, den), kc, vc
+
+    return compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(rep, rep, rep, shc, shc, P()),
+        out_specs=(rep, shc, shc),
+        axis_names=manual, check_vma=False)(
+            q, k_new, v_new, k_cache, v_cache, length)
+
+
+# ---------------------------------------------------------------------------
+# Compressed gradient reduction
+# ---------------------------------------------------------------------------
+
+
+def compress_psum(x, axis_name: str, method: str):
+    """psum over ``axis_name`` with the payload compressed to ``method``.
+
+    Emulates the wire format of a compressed cross-pod (DCN) gradient
+    all-reduce; must be called inside a shard_map that is manual over
+    ``axis_name``. "bf16" casts the payload; "int8" quantizes against a
+    shared per-tensor amax (one extra scalar pmax) and sums in int32 so
+    the accumulator can't saturate. Returns fp32. Round-trip error bounds
+    are pinned by tests/test_collectives_ref.py.
+    """
+    if method in (None, "none"):
+        return jax.lax.psum(x, axis_name)
+    if method == "bf16":
+        return jax.lax.psum(x.astype(jnp.bfloat16),
+                            axis_name).astype(jnp.float32)
+    if method == "int8":
+        xf = x.astype(jnp.float32)
+        amax = jax.lax.pmax(jnp.max(jnp.abs(xf)), axis_name)
+        scale = jnp.maximum(amax, 1e-30) / 127.0
+        q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        return total.astype(jnp.float32) * scale
+    raise ValueError(f"unknown grad compression method {method!r}")

@@ -1,0 +1,102 @@
+"""JAX version shims.
+
+The call sites in this repo (models, training, tests) are written against
+the modern JAX surface: ``jax.shard_map(..., axis_names=..., check_vma=...)``,
+``jax.sharding.AxisType`` and ``jax.make_mesh(..., axis_types=...)``. The
+pinned toolchain ships jax 0.4.x, where shard_map lives in
+``jax.experimental.shard_map`` (``check_rep`` / ``auto`` spelling) and
+meshes have no axis types. Importing :mod:`repro.dist` installs these
+adapters once so the same source runs on either version; on a new-enough
+jax every patch is a no-op.
+
+Partial-manual shard_map (``axis_names`` a strict subset of the mesh axes)
+only works under ``jax.jit`` on 0.4.x — eager dispatch raises
+NotImplementedError upstream. Every call site here is jitted.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+_PATCHED = False
+
+
+class _AxisType(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=None, check_rep=None):
+    """Adapter with the jax>=0.6 keyword surface over either implementation.
+
+    ``axis_names`` lists the MANUAL axes; the rest of the mesh stays
+    GSPMD-auto inside the body (0.4.x spells this ``auto=<complement>``).
+    """
+    check = True
+    if check_vma is not None:
+        check = check_vma
+    elif check_rep is not None:
+        check = check_rep
+    if hasattr(jax, "_repro_native_shard_map"):
+        return jax._repro_native_shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=axis_names, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _sm(f, mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check, auto=auto)
+
+
+def _patch_axis_type():
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+
+
+def _patch_make_mesh():
+    if "axis_types" in inspect.signature(jax.make_mesh).parameters:
+        return
+    orig = jax.make_mesh
+
+    @functools.wraps(orig)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+        del axis_types  # 0.4.x meshes are implicitly all-Auto
+        return orig(axis_shapes, axis_names, devices=devices)
+
+    jax.make_mesh = make_mesh
+
+
+def _patch_shard_map():
+    if hasattr(jax, "shard_map"):
+        # keep a handle so the adapter above forwards to the native one
+        if not hasattr(jax, "_repro_native_shard_map"):
+            jax._repro_native_shard_map = jax.shard_map
+        return
+    jax.shard_map = shard_map
+
+
+def _patch_pallas():
+    try:
+        import jax.experimental.pallas.tpu as pltpu
+    except ImportError:  # pallas not shipped on this platform
+        return
+    if not hasattr(pltpu, "CompilerParams") \
+            and hasattr(pltpu, "TPUCompilerParams"):
+        pltpu.CompilerParams = pltpu.TPUCompilerParams
+
+
+def install():
+    global _PATCHED
+    if _PATCHED:
+        return
+    _patch_axis_type()
+    _patch_make_mesh()
+    _patch_shard_map()
+    _patch_pallas()
+    _PATCHED = True

@@ -1,0 +1,256 @@
+"""Sharding planner: logical param axes -> mesh PartitionSpecs.
+
+Strategies (``pick_strategy`` auto-selects by param bytes and mesh):
+  * "tp"      — tensor parallel only: one TP-natural dim per tensor sharded
+                over the "model" axis (Megatron layout); params replicated
+                over the data axes. Inference default for models whose
+                weights fit per-chip when divided by the model axis.
+  * "fsdp"    — pure ZeRO-3: each tensor's largest dim sharded over EVERY
+                mesh axis, no TP. Training default for small models (the
+                batch then shards over all chips too — the caller sets
+                ``set_batch_axes`` accordingly).
+  * "fsdp_tp" — TP layout over "model" plus ZeRO-3 sharding of a second
+                dim over the data axes. Training default for large models.
+
+Every produced spec is passed through :func:`sanitize_spec`, so axes that
+don't exist on the mesh or don't divide their dim are dropped — a spec
+coming out of this module never fails to apply.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import context as ctx
+
+# logical axes eligible for tensor parallelism, in priority order
+TP_CANDIDATES = ("experts", "d_ff", "heads", "kv_heads", "vocab")
+# never shard these: "layers" is the scan dim, "head_dim" is tiny
+_NEVER_SHARD = ("layers", "head_dim")
+
+HBM_BYTES = 16 * 2 ** 30          # TPU v5e chip
+FSDP_MAX_PARAM_BYTES = 16e9       # <=8B bf16 params counts as "small"
+_TRAIN_STATE_MULT = 7             # bf16 params + fp32 master/m/v, /2 bytes
+
+
+def _tree_map_specs(fn, param_specs):
+    # lazy import: repro.models imports repro.dist at package init
+    from repro.models.common import tree_map_spec
+    return tree_map_spec(fn, param_specs)
+
+
+def param_bytes(param_specs) -> int:
+    from repro.models.common import param_bytes as _pb
+    return _pb(param_specs)
+
+
+# ---------------------------------------------------------------------------
+# Spec sanitation
+# ---------------------------------------------------------------------------
+
+
+def sanitize_spec(spec, shape, mesh) -> P:
+    """Drop unusable axes from a PartitionSpec for a tensor of ``shape``.
+
+    Guarantees about the returned spec:
+      * every named axis exists on ``mesh``,
+      * no axis is used twice,
+      * for each dim the kept axes' combined size divides the dim
+        (axes are considered left-to-right; a non-dividing axis is
+        skipped, later axes may still apply),
+      * length equals ``len(shape)`` (short specs pad with None,
+        over-long specs truncate).
+    """
+    entries = tuple(spec)
+    if len(entries) < len(shape):
+        entries = entries + (None,) * (len(shape) - len(entries))
+    entries = entries[:len(shape)]
+    used = set()
+    out = []
+    for dim, e in zip(shape, entries):
+        if e is None:
+            out.append(None)
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        kept, prod = [], 1
+        for a in axes:
+            if a is None or a in used or a not in mesh.shape:
+                continue
+            n = int(mesh.shape[a])
+            if n <= 1 or dim % (prod * n):
+                continue
+            kept.append(a)
+            prod *= n
+            used.add(a)
+        if not kept:
+            out.append(None)
+        elif len(kept) == 1:
+            out.append(kept[0])
+        else:
+            out.append(tuple(kept))
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# Strategy selection
+# ---------------------------------------------------------------------------
+
+
+def pick_strategy(param_specs, mesh, kind: str = "train",
+                  hbm_bytes: int = HBM_BYTES) -> str:
+    """Choose "fsdp" / "tp" / "fsdp_tp" for an (arch, mesh, kind) cell.
+
+    Train: small models go pure-FSDP (no TP all-reduces; requires the
+    optimizer state to fit sharded over all chips); everything else
+    ZeRO-3 + TP. Inference: TP alone when weights fit per chip after the
+    model-axis split, else additionally shard over the data axes.
+    """
+    pb = param_bytes(param_specs)
+    chips = int(mesh.devices.size)
+    msize = int(mesh.shape.get("model", 1))
+    if kind == "train":
+        state = pb * _TRAIN_STATE_MULT
+        if pb <= FSDP_MAX_PARAM_BYTES and state <= 0.5 * hbm_bytes * chips:
+            return "fsdp"
+        return "fsdp_tp"
+    if pb / max(msize, 1) <= 0.5 * hbm_bytes:
+        return "tp"
+    return "fsdp_tp"
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+def _spec_for(s, strategy: str, mesh) -> P:
+    """PartitionSpec for one AxSpec leaf under ``strategy``."""
+    names = list(s.axes)
+    entries: list = [None] * len(names)
+    msize = int(mesh.shape.get("model", 1))
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    dp_size = int(math.prod(mesh.shape[a] for a in dp)) if dp else 1
+
+    if strategy in ("tp", "fsdp_tp") and msize > 1:
+        # one TP-natural dim over "model"; fall through the candidate
+        # list until one divides (e.g. 28 heads on a 16-wide axis -> d_ff)
+        for cand in TP_CANDIDATES:
+            if cand in names:
+                i = names.index(cand)
+                if s.shape[i] % msize == 0:
+                    entries[i] = "model"
+                    break
+
+    if strategy == "fsdp":
+        all_axes = tuple(mesh.axis_names)
+        order = sorted((i for i in range(len(names))
+                        if names[i] not in _NEVER_SHARD),
+                       key=lambda i: -s.shape[i])
+        for i in order:
+            entries[i] = all_axes
+            break
+    elif strategy == "fsdp_tp" and dp and dp_size > 1:
+        # ZeRO-3: largest remaining dim over the data axes
+        order = sorted((i for i in range(len(names))
+                        if entries[i] is None
+                        and names[i] not in _NEVER_SHARD),
+                       key=lambda i: -s.shape[i])
+        for i in order:
+            if s.shape[i] % dp_size == 0:
+                entries[i] = dp if len(dp) > 1 else dp[0]
+                break
+    return sanitize_spec(P(*entries), s.shape, mesh)
+
+
+def param_specs_tree(param_specs, strategy: str, mesh):
+    """Tree of PartitionSpec mirroring an AxSpec param tree."""
+    return _tree_map_specs(lambda s: _spec_for(s, strategy, mesh),
+                           param_specs)
+
+
+def param_shardings(param_specs, strategy: str, mesh):
+    """Tree of NamedSharding mirroring an AxSpec param tree."""
+    return _tree_map_specs(
+        lambda s: NamedSharding(mesh, _spec_for(s, strategy, mesh)),
+        param_specs)
+
+
+# alias referenced by models/common.py docs (logical axes -> PartitionSpec)
+specs_for = param_specs_tree
+
+
+# ---------------------------------------------------------------------------
+# Input / cache shardings
+# ---------------------------------------------------------------------------
+
+
+def input_shardings(inputs, mesh):
+    """Batch-shard dim 0 of every input leaf over the data axes."""
+    dp = ctx.dp_axes(mesh)
+
+    def one(x):
+        if not len(x.shape):
+            return NamedSharding(mesh, P())
+        spec = P(dp if dp else None, *([None] * (len(x.shape) - 1)))
+        return NamedSharding(mesh, sanitize_spec(spec, x.shape, mesh))
+
+    return jax.tree.map(one, inputs)
+
+
+def cache_shardings(cache, cfg, mesh, *, seq_shard: bool = False):
+    """Shardings for a decode cache pytree.
+
+    Attention KV leaves — rank-5 (groups, batch, seq, kv_heads, head_dim)
+    or rank-4 without the groups dim — shard batch over the data axes and,
+    when ``seq_shard``, the sequence dim over "model" (the layout
+    ``collectives.seq_sharded_*`` consumes); otherwise kv_heads go over
+    "model" when divisible. All other leaves (SSM conv/state buffers)
+    shard batch only. Scalars (the cache length) replicate.
+    """
+    dp = ctx.dp_axes(mesh)
+    dpe = dp if dp else None
+
+    def one(x):
+        n = len(x.shape)
+        if n == 0:
+            return NamedSharding(mesh, P())
+        if n >= 4:
+            lead = (None,) * (n - 4)
+            if seq_shard:
+                spec = P(*lead, dpe, "model", None, None)
+            else:
+                spec = P(*lead, dpe, None, "model", None)
+        else:
+            lead = (None,) * (n - 2) if n >= 2 else ()
+            spec = P(*lead, dpe) if n >= 2 else P(None)
+        return NamedSharding(mesh, sanitize_spec(spec, x.shape, mesh))
+
+    def is_kv_leaf(x):
+        return hasattr(x, "shape") and len(x.shape) >= 4
+
+    def batch_only(x):
+        n = len(x.shape)
+        if n == 0:
+            return NamedSharding(mesh, P())
+        # leaves lead with (groups, batch, ...)
+        spec = P(None, dpe, *([None] * (n - 2))) if n >= 2 else P(None)
+        return NamedSharding(mesh, sanitize_spec(spec, x.shape, mesh))
+
+    # distinguish attention KV blocks from SSM state by pattern position
+    # when the cache carries one (transformer.Cache); otherwise fall back
+    # to rank-based dispatch (encdec caches are all-attention).
+    layers = getattr(cache, "layers", None)
+    if layers is not None and cfg is not None \
+            and len(getattr(cfg, "pattern", ())) == len(layers):
+        sh_layers = []
+        for lspec, layer in zip(cfg.pattern, layers):
+            if lspec.mixer.startswith("attn"):
+                sh_layers.append(jax.tree.map(one, layer))
+            else:
+                sh_layers.append(jax.tree.map(batch_only, layer))
+        return type(cache)(layers=tuple(sh_layers),
+                           length=NamedSharding(mesh, P()))
+    return jax.tree.map(lambda x: one(x) if is_kv_leaf(x) else batch_only(x),
+                        cache)

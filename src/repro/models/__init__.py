@@ -1,5 +1,28 @@
-"""Model substrate: unified LM / MoE / SSM / enc-dec in pure functional JAX."""
-from repro.models.common import (AxSpec, LayerSpec, ModelConfig, MoEConfig,  # noqa: F401
-                                 RunConfig, SSMConfig, abstract_params,
-                                 init_params, param_bytes, param_count)
-from repro.models.model_zoo import SHAPES, Model, SkipCell, build, shape_applicable  # noqa: F401
+"""Model substrate: unified LM / MoE / SSM / enc-dec in pure functional JAX.
+
+Re-exports are lazy (PEP 562): importing ``repro.models`` never pulls in
+the family modules, so one broken import (e.g. a missing optional dep in
+a single family) can't take down every consumer of the package — test
+collection stays alive and unrelated attributes keep working.
+"""
+_COMMON = ("AxSpec", "LayerSpec", "ModelConfig", "MoEConfig", "RunConfig",
+           "SSMConfig", "abstract_params", "init_params", "param_bytes",
+           "param_count")
+_ZOO = ("SHAPES", "Model", "SkipCell", "build", "shape_applicable")
+
+__all__ = sorted(_COMMON + _ZOO)
+
+
+def __getattr__(name):
+    if name in _COMMON:
+        from repro.models import common
+        return getattr(common, name)
+    if name in _ZOO:
+        from repro.models import model_zoo
+        return getattr(model_zoo, name)
+    raise AttributeError(
+        f"module 'repro.models' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,0 +1,217 @@
+"""Fast single-device tests for repro.dist.context / sharding.
+
+Everything here runs on the default one-CPU-device jax (no subprocess,
+no mesh bigger than the host): the mesh-optional contract — no-ops
+without a mesh, sanitation against indivisible dims — is exactly what
+these pin down. The multi-device behavior lives in
+test_dist_and_dryrun.py (slow tier).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import context as dctx
+from repro.dist import sharding as shd
+from repro.models.common import AxSpec
+
+
+def mesh1(axes=("data", "model")):
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.array(jax.devices()[:1]).reshape((1,) * len(axes)), axes)
+
+
+class FakeMesh:
+    """Shape-only stand-in so divisibility logic can be tested against
+    meshes larger than the host (sanitize/pick_strategy never touch
+    devices beyond ``devices.size``)."""
+
+    class _Dev:
+        def __init__(self, size):
+            self.size = size
+
+    def __init__(self, shape: dict):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+        self.devices = self._Dev(1)
+        for n in shape.values():
+            self.devices.size *= n
+
+
+# ---------------------------------------------------------------------------
+# mesh_context
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_context_nests_and_restores():
+    assert dctx.get_mesh() is None
+    m1, m2 = mesh1(), mesh1(("model",))
+    with dctx.mesh_context(m1):
+        assert dctx.get_mesh() is m1
+        with dctx.mesh_context(m2):
+            assert dctx.get_mesh() is m2
+        assert dctx.get_mesh() is m1
+    assert dctx.get_mesh() is None
+
+
+def test_mesh_context_restores_on_exception():
+    with pytest.raises(RuntimeError):
+        with dctx.mesh_context(mesh1()):
+            raise RuntimeError("boom")
+    assert dctx.get_mesh() is None
+
+
+def test_axis_size_no_mesh_and_missing_axis():
+    assert dctx.axis_size("model") == 1
+    with dctx.mesh_context(mesh1(("data", "model"))):
+        assert dctx.axis_size("model") == 1
+        assert dctx.axis_size("nonexistent") == 1
+    assert dctx.axis_size("model", FakeMesh({"model": 4})) == 4
+
+
+# ---------------------------------------------------------------------------
+# dp_axes / set_batch_axes
+# ---------------------------------------------------------------------------
+
+
+def test_dp_axes_defaults_and_override():
+    assert dctx.dp_axes() == ()
+    m = FakeMesh({"pod": 2, "data": 2, "model": 2})
+    assert dctx.dp_axes(m) == ("pod", "data")
+    try:
+        dctx.set_batch_axes(("pod", "data", "model"))
+        assert dctx.dp_axes(m) == ("pod", "data", "model")
+        # axes absent from the mesh are filtered out
+        assert dctx.dp_axes(FakeMesh({"data": 2, "model": 2})) == \
+            ("data", "model")
+    finally:
+        dctx.set_batch_axes(None)
+    assert dctx.dp_axes(m) == ("pod", "data")
+
+
+# ---------------------------------------------------------------------------
+# constrain / constrain_dims
+# ---------------------------------------------------------------------------
+
+
+def test_constrain_is_identity_without_mesh():
+    x = jnp.ones((4, 6))
+    y = dctx.constrain(x, "model", None)
+    assert y is x
+    z = dctx.constrain_dims(x, (("data", "model"), None))
+    assert z is x
+
+
+def test_constrain_sanitizes_indivisible_dims_under_mesh():
+    # one-device mesh: every axis has size 1, so everything sanitizes to
+    # replicated and the constraint is a well-formed no-op.
+    x = jnp.arange(12.0).reshape(3, 4)
+    with dctx.mesh_context(mesh1()):
+        y = jax.jit(lambda a: dctx.constrain(a, "model", "data"))(x)
+    assert jnp.allclose(y, x)
+
+
+def test_constrain_pads_short_specs():
+    x = jnp.ones((2, 3, 4, 5))
+    with dctx.mesh_context(mesh1()):
+        y = dctx.constrain(x, None, "model")  # 2 entries for a 4-d tensor
+    assert y.shape == x.shape
+
+
+# ---------------------------------------------------------------------------
+# sanitize_spec
+# ---------------------------------------------------------------------------
+
+
+def test_sanitize_drops_non_dividing_axes():
+    m = FakeMesh({"data": 2, "model": 16})
+    # 28 % 16 != 0 -> "model" dropped; 64 % 2 == 0 -> "data" kept
+    s = shd.sanitize_spec(P("model", "data"), (28, 64), m)
+    assert s == P(None, "data")
+
+
+def test_sanitize_keeps_dividing_prefix_of_tuple_entries():
+    m = FakeMesh({"pod": 2, "data": 2, "model": 4})
+    # 4 divides by pod*data=4 but not pod*data*model=16 -> model dropped
+    s = shd.sanitize_spec(P(("pod", "data", "model"),), (4,), m)
+    assert s == P(("pod", "data"))
+    # a later axis may still apply after a skipped one: 2 % (2*2) != 0
+    # for ("pod","data") but 2 % 2 == 0 keeps "pod" alone
+    s = shd.sanitize_spec(P(("pod", "data"),), (2,), m)
+    assert s == P("pod")
+
+
+def test_sanitize_drops_unknown_and_duplicate_axes_and_pads():
+    m = FakeMesh({"data": 2, "model": 4})
+    s = shd.sanitize_spec(P("ghost", "model", "model"), (8, 8, 8, 8), m)
+    assert s == P(None, "model", None, None)
+    assert len(tuple(s)) == 4
+
+
+# ---------------------------------------------------------------------------
+# pick_strategy
+# ---------------------------------------------------------------------------
+
+
+def _fake_params(n_bytes: int):
+    # one bf16 tensor of n_bytes
+    return {"w": AxSpec((n_bytes // 2,), ("d_model",))}
+
+
+def test_pick_strategy_boundaries():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    small = _fake_params(int(2e9))    # 1B params
+    large = _fake_params(int(64e9))   # 32B params
+    huge = _fake_params(int(640e9))   # 320B params
+    assert shd.pick_strategy(small, mesh, "train") == "fsdp"
+    assert shd.pick_strategy(large, mesh, "train") == "fsdp_tp"
+    # inference: weights/model_axis vs HBM
+    assert shd.pick_strategy(small, mesh, "decode") == "tp"
+    assert shd.pick_strategy(large, mesh, "prefill") == "tp"
+    assert shd.pick_strategy(huge, mesh, "decode") == "fsdp_tp"
+
+
+def test_pick_strategy_small_mesh_train_stays_fsdp_only_when_state_fits():
+    # 250M params (0.5 GB bf16) -> 3.5 GB param+optimizer state: fits in
+    # half of one 16 GB chip -> fsdp; on a 2 GiB chip it must fall back.
+    one = FakeMesh({"data": 1, "model": 1})
+    small = _fake_params(int(5e8))
+    assert shd.pick_strategy(small, one, "train") == "fsdp"
+    assert shd.pick_strategy(small, one, "train",
+                             hbm_bytes=2 * 2 ** 30) == "fsdp_tp"
+
+
+# ---------------------------------------------------------------------------
+# param spec planning
+# ---------------------------------------------------------------------------
+
+
+def test_param_specs_tree_tp_layout():
+    m = FakeMesh({"data": 2, "model": 4})
+    specs = {
+        "wq": AxSpec((8, 64, 8, 16), ("layers", "d_model", "heads",
+                                      "head_dim")),
+        "w2": AxSpec((8, 96, 64), ("layers", "d_ff", "d_model")),
+        "norm": AxSpec((64,), ("d_model",)),
+    }
+    tree = shd.param_specs_tree(specs, "tp", m)
+    assert tree["wq"] == P(None, None, "model", None)
+    assert tree["w2"] == P(None, "model", None)
+    assert tree["norm"] == P(None)
+
+
+def test_param_specs_tree_tp_falls_back_when_indivisible():
+    m = FakeMesh({"data": 2, "model": 16})
+    # 28 heads don't divide 16 -> d_ff (next candidate by priority that
+    # exists) takes the model axis instead
+    specs = {"w": AxSpec((28, 96), ("heads", "d_ff"))}
+    assert shd.param_specs_tree(specs, "tp", m)["w"] == P(None, "model")
+
+
+def test_param_specs_tree_fsdp_shards_largest_dim_over_all_axes():
+    m = FakeMesh({"data": 2, "model": 4})
+    specs = {"w": AxSpec((8, 64, 16), ("layers", "d_model", "head_dim"))}
+    tree = shd.param_specs_tree(specs, "fsdp", m)
+    # largest non-layers/head_dim dim is d_model=64; 64 % 8 == 0
+    assert tree["w"] == P(None, ("data", "model"), None)

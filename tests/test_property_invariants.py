@@ -3,7 +3,13 @@ decomposition coverage, cost-model monotonicity/accounting, capacity,
 merge exactness, checkpoint round-trips.
 """
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed; property tests skip rather than "
+           "breaking collection of the whole suite")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (ArtifactStore, AWSPriceBook, BatchJob,
                         LatencyModel, Orchestrator, OrchestratorConfig,
