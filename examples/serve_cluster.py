@@ -1,7 +1,12 @@
-"""Pod-style serving with fault injection: the orchestrator drives LM
-generation workers (continuous batching) while crashes and stragglers are
-injected — demonstrates retries, speculation, and exactly-once commits on
-a generative (non-classifier) workload.
+"""Pod-style serving with fault injection: a mesh-aware engine drives LM
+generation workers (continuous batching over sharded KV caches) while
+crashes and stragglers are injected — demonstrates retries, speculation,
+and exactly-once commits on a generative (non-classifier) workload.
+
+The mesh spans every local device as the "model" axis, so on a pod the
+decode caches are sequence-sharded over the chips (the
+``dist.collectives`` fused path) while on a 1-CPU container the same
+code degrades to single-device serving.
 
     PYTHONPATH=src python examples/serve_cluster.py
 """
@@ -13,31 +18,30 @@ from repro.core import (ArtifactStore, BatchJob, FaultInjector,
                         LatencyModel, Orchestrator, OrchestratorConfig,
                         ElasticPolicy, ServerlessFunction, decompose)
 from repro.data.pipeline import DatasetRef
+from repro.launch.mesh import make_host_mesh
 from repro.models import RunConfig, build
-from repro.serving import Engine, Request, SlotScheduler
+from repro.serving import ContinuousBatcher, Engine, Request
 
 cfg = configs.smoke("qwen2-7b")
 model = build(cfg)
 params = model.init(jax.random.PRNGKey(0))
-engine = Engine(model, RunConfig(cache_pad=64))
+mesh = make_host_mesh((1, jax.device_count()), ("data", "model"))
+engine = Engine(model, RunConfig(cache_pad=64), mesh=mesh, seq_shard=True)
+params = engine.shard_params(params)
 
-# --- continuous batching demo on real decode steps -------------------------
-print("== continuous batching: 24 generation requests over 4 slots ==")
-sched = SlotScheduler(n_slots=4)
+# --- continuous batching demo on real sharded decode steps -----------------
+print(f"== continuous batching: 24 generation requests over 4 slots "
+      f"(mesh {dict(mesh.shape)}) ==")
+batcher = ContinuousBatcher(engine, params, n_slots=4)
 rng = np.random.default_rng(0)
 for rid in range(24):
-    sched.submit(Request(rid, rng.integers(0, cfg.vocab_size, 8),
-                         max_new_tokens=int(rng.integers(4, 12))))
-rounds = 0
-while not sched.idle:
-    admitted = sched.admit()
-    for slot in list(sched.active):
-        req = sched.slots[slot]
-        out = engine.generate(params, req.prompt[None], max_new_tokens=1)
-        sched.step_done(slot, out[0, -1])
-    rounds += 1
-print(f"  completed {len(sched.completed)} requests in {rounds} decode "
-      f"rounds (slot reuse = continuous batching)")
+    batcher.submit(Request(rid, rng.integers(0, cfg.vocab_size, 8),
+                           max_new_tokens=int(rng.integers(4, 12))))
+completed = batcher.run()
+print(f"  completed {len(completed)} requests in {batcher.decode_steps} "
+      f"decode steps across {len(engine._exec)} compiled executables "
+      f"(slot reuse = continuous batching; caches stay in the "
+      f"cache_shardings layout through every admit/evict)")
 
 # --- orchestrated generation job under faults -------------------------------
 print("\n== orchestrated generation job with injected faults ==")

@@ -55,7 +55,13 @@ class ServerlessFunction:
             n_bytes = self.store.size(self.params_ref)
             load_s = self.store.read_time_s(n_bytes)
             if self.engine is not None:
-                self._params = self.store.get_tree(self.params_ref)
+                params = self.store.get_tree(self.params_ref)
+                # place in the engine's planner layout on load (no-op for
+                # a meshless engine) — the serving hot path then never
+                # reshards params per invocation
+                if hasattr(self.engine, "shard_params"):
+                    params = self.engine.shard_params(params)
+                self._params = params
         return load_s
 
     def invoke(self, job: BatchJob, chunk: Chunk,

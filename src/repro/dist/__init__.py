@@ -15,4 +15,5 @@ from repro.dist.sharding import (cache_shardings, input_shardings,  # noqa: E402
                                  param_shardings, param_specs_tree,
                                  pick_strategy, sanitize_spec)
 from repro.dist.collectives import (compress_psum, seq_sharded_decode,  # noqa: E402,F401
-                                    seq_sharded_write_decode)
+                                    seq_sharded_write_decode,
+                                    set_fused_partials)

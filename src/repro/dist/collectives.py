@@ -9,17 +9,25 @@ variant also writes the new token's K/V into whichever shard owns global
 position ``length``, shard-locally, so SPMD can't decide to all-gather
 the cache around the update.
 
-Both fall back to the identical single-device math when there is no
-ambient mesh, the "model" axis is trivial, or the sequence doesn't divide
-— ``tests/test_collectives_ref.py`` pins that fallback against
-``decode_attention_ref``, and the 8-device subprocess test pins the
-sharded path against the same oracle.
+The per-shard block is the ``kernels/decode_attention`` Pallas kernel
+(``decode_attention_partials``) on TPU; off-TPU it runs the identical
+pure-jnp math (``decode_attention_partials_ref``) so CPU tests and
+dry-runs stay green. ``set_fused_partials`` / ``REPRO_SEQ_SHARD_FUSED``
+override the dispatch (forcing the kernel off-TPU runs it in Pallas
+interpret mode — the parity tests use exactly that).
+
+Both entry points fall back to the identical single-device math when
+there is no ambient mesh, the "model" axis is trivial, or the sequence
+doesn't divide — ``tests/test_collectives_ref.py`` pins that fallback
+against ``decode_attention_ref``, and the 8-device subprocess test pins
+the sharded path against the same oracle.
 
 ``compress_psum`` emulates an int8/bf16-compressed gradient all-reduce
 over a (DCN) mesh axis inside a partially-manual shard_map.
 """
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 import jax
@@ -28,13 +36,30 @@ import jax.numpy as jnp
 from repro.dist import compat
 from repro.dist import context as ctx
 
-NEG_INF = -1e30
+# tri-state override for the Pallas-fused per-shard block:
+# None = auto (TPU only), True/False = forced (see set_fused_partials)
+_FUSED_OVERRIDE: Optional[bool] = None
 
 
-def _softcap(x, cap: Optional[float]):
-    if cap is None:
-        return x
-    return cap * jnp.tanh(x / cap)
+def set_fused_partials(enabled: Optional[bool]):
+    """Force the per-shard partial-softmax implementation.
+
+    ``True`` dispatches to the Pallas kernel even off-TPU (interpret
+    mode), ``False`` forces the pure-jnp reference, ``None`` restores the
+    default: kernel on TPU, jnp elsewhere. The ``REPRO_SEQ_SHARD_FUSED``
+    env var ("1"/"0") has the same effect when no override is set.
+    """
+    global _FUSED_OVERRIDE
+    _FUSED_OVERRIDE = enabled
+
+
+def fused_partials_enabled() -> bool:
+    if _FUSED_OVERRIDE is not None:
+        return _FUSED_OVERRIDE
+    env = os.environ.get("REPRO_SEQ_SHARD_FUSED")
+    if env is not None:
+        return env not in ("", "0", "false", "False")
+    return jax.default_backend() == "tpu"
 
 
 def _partial_decode(q, k_blk, v_blk, length, offset, window, cap):
@@ -44,26 +69,20 @@ def _partial_decode(q, k_blk, v_blk, length, offset, window, cap):
     row t is ``offset + t``. Returns (num (B,KV,G,hd), den (B,KV,G),
     m (B,KV,G)) — all fp32 — such that softmax-attention over the union of
     blocks is ``psum(num·e^{m-M}) / psum(den·e^{m-M})`` with M = pmax(m).
+
+    Dispatches to the fused Pallas kernel when
+    :func:`fused_partials_enabled` (interpret mode off-TPU), else to the
+    jnp reference — same contract either way.
     """
-    b, _, h, hd = q.shape
-    kv = k_blk.shape[2]
-    g = h // kv
-    qg = q.reshape(b, kv, g, hd).astype(jnp.float32)
-    logits = jnp.einsum("bkgh,btkh->bkgt", qg,
-                        k_blk.astype(jnp.float32)) / (hd ** 0.5)
-    logits = _softcap(logits, cap)
-    pos = offset + jnp.arange(k_blk.shape[1])
-    mask = pos <= length
-    if window is not None:
-        mask = mask & (pos > length - window)
-    logits = jnp.where(mask[None, None, None, :], logits, NEG_INF)
-    m = jnp.max(logits, axis=-1)  # (B,KV,G); NEG_INF on all-masked blocks
-    p = jnp.exp(logits - m[..., None])
-    # all-masked block: logits - m == 0 would give weight 1 — zero it out
-    p = jnp.where(mask[None, None, None, :], p, 0.0)
-    den = jnp.sum(p, axis=-1)
-    num = jnp.einsum("bkgt,btkh->bkgh", p, v_blk.astype(jnp.float32))
-    return num, den, m
+    from repro.kernels.decode_attention import ops as da_ops
+    from repro.kernels.decode_attention import ref as da_ref
+    if fused_partials_enabled():
+        return da_ops.decode_attention_partials(
+            q[:, 0], k_blk, v_blk, length, offset=offset, window=window,
+            softcap=cap)
+    return da_ref.decode_attention_partials_ref(
+        q[:, 0], k_blk, v_blk, length, offset=offset, window=window,
+        softcap=cap)
 
 
 def _combine_local(q, num, den):
@@ -84,7 +103,14 @@ def _write_at(cache, new, index):
 
 def _shard_plan(mesh, batch: int, seq: int):
     """(batch_spec_entry, manual_axes) for the decode shard_maps, or None
-    when the sequence can't shard over "model"."""
+    when the sequence can't shard over "model".
+
+    The data axes are always MANUAL (batch split when it divides,
+    replicated via a None spec when it doesn't): leaving them auto makes
+    the shard_map partially-manual, and ``axis_index("model")`` then
+    lowers to a PartitionId instruction jax 0.4.x SPMD rejects — hit by
+    batch-of-1 continuous-batching slots on a multi-device data axis.
+    """
     msize = ctx.axis_size("model", mesh)
     if mesh is None or msize <= 1 or seq % msize:
         return None
@@ -94,7 +120,7 @@ def _shard_plan(mesh, batch: int, seq: int):
     for a in dp:
         dp_size *= int(mesh.shape[a])
     bspec = dp if (dp and batch % dp_size == 0) else None
-    manual = frozenset((bspec or ()) + ("model",))
+    manual = frozenset(dp + ("model",))
     return bspec, manual
 
 

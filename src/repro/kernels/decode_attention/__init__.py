@@ -1,2 +1,4 @@
-from repro.kernels.decode_attention.ops import decode_attention  # noqa: F401
-from repro.kernels.decode_attention.ref import decode_attention_ref  # noqa: F401
+from repro.kernels.decode_attention.ops import (decode_attention,  # noqa: F401
+                                                decode_attention_partials)
+from repro.kernels.decode_attention.ref import (decode_attention_partials_ref,  # noqa: F401
+                                                decode_attention_ref)

@@ -14,7 +14,12 @@ Design:
 
 The same (m, l, acc) merge math is reused one level up by
 ``dist.collectives.seq_sharded_decode`` to combine per-chip partials of a
-sequence-sharded cache — kernel intra-chip, psum-merge inter-chip.
+sequence-sharded cache — kernel intra-chip, psum-merge inter-chip. The
+``decode_attention_partials_kernel`` variant exports exactly that seam:
+instead of normalizing at the last tile it emits the raw (acc, l, m)
+online-softmax state, in the layout ``collectives._partial_decode``
+produces, so the per-shard block of the sequence-sharded path IS this
+kernel and the cross-chip combine stays one pmax + two psums.
 """
 from __future__ import annotations
 
@@ -29,18 +34,15 @@ import jax.experimental.pallas.tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            scale: float, block_t: int, n_t: int, group: int,
-            window: Optional[int], softcap: Optional[float]):
-    ti = pl.program_id(2)
-    length = len_ref[0]
+def _tile_update(q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr, *,
+                 ti, upper, lower, scale: float, block_t: int, group: int,
+                 softcap: Optional[float]):
+    """One online-softmax step over the current (block_t, D) KV tile.
 
-    @pl.when(ti == 0)
-    def _init():
-        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
-        l_scr[...] = jnp.zeros_like(l_scr)
-        acc_scr[...] = jnp.zeros_like(acc_scr)
-
+    Columns attend iff ``lower < col <= upper`` (global positions are the
+    caller's concern — it folds any shard offset into the bounds).
+    Updates the (m, l, acc) VMEM scratch in place.
+    """
     q = q_ref[0, :, 0, :].astype(jnp.float32)  # (group, D)
     k = k_ref[0, :, 0, :].astype(jnp.float32)  # (block_t, D)
     v = v_ref[0, :, 0, :].astype(jnp.float32)
@@ -52,9 +54,7 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     cols = ti * block_t + jax.lax.broadcasted_iota(jnp.int32,
                                                    (group, block_t), 1)
-    mask = cols <= length
-    if window is not None:
-        mask &= cols > length - window
+    mask = (cols <= upper) & (cols > lower)
     s = jnp.where(mask, s, NEG_INF)
 
     m_prev = m_scr[...]
@@ -68,11 +68,54 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
     m_scr[...] = m_new
 
+
+def _init_scratch(m_scr, l_scr, acc_scr, ti):
+    @pl.when(ti == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, block_t: int, n_t: int, group: int,
+            window: Optional[int], softcap: Optional[float]):
+    ti = pl.program_id(2)
+    length = len_ref[0]
+    lower = length - window if window is not None else jnp.int32(-2 ** 30)
+    _init_scratch(m_scr, l_scr, acc_scr, ti)
+    _tile_update(q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr, ti=ti,
+                 upper=length, lower=lower, scale=scale, block_t=block_t,
+                 group=group, softcap=softcap)
+
     @pl.when(ti == n_t - 1)
     def _done():
         l = l_scr[...]
         l = jnp.where(l == 0.0, 1.0, l)
         o_ref[0, :, 0, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def _kernel_partials(bounds_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                     m_scr, l_scr, acc_scr, *, scale: float, block_t: int,
+                     n_t: int, group: int, softcap: Optional[float]):
+    """Same tile loop as ``_kernel`` but emits raw (acc, l, m) partials.
+
+    ``bounds_ref`` prefetches (upper, lower): LOCAL column bounds with the
+    sequence-shard offset already subtracted, so a shard that owns no
+    valid position (upper < 0) produces the neutral element
+    (acc=0, l=0, m=NEG_INF) and drops out of the cross-shard combine.
+    """
+    ti = pl.program_id(2)
+    _init_scratch(m_scr, l_scr, acc_scr, ti)
+    _tile_update(q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr, ti=ti,
+                 upper=bounds_ref[0], lower=bounds_ref[1], scale=scale,
+                 block_t=block_t, group=group, softcap=softcap)
+
+    @pl.when(ti == n_t - 1)
+    def _done():
+        o_ref[...] = acc_scr[...].reshape(o_ref.shape)
+        m_ref[...] = m_scr[...].reshape(m_ref.shape)
+        l_ref[...] = l_scr[...].reshape(l_ref.shape)
 
 
 @functools.partial(
@@ -126,3 +169,72 @@ def decode_attention_kernel(q, k_cache, v_cache, length, *,
         name="decode_attention",
     )(jnp.asarray(length, jnp.int32)[None], qg, k_cache, v_cache)
     return out.transpose(0, 2, 1, 3).reshape(b, h, d)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("softcap", "block_t", "interpret"))
+def decode_attention_partials_kernel(q, k_cache, v_cache, bounds, *,
+                                     softcap: Optional[float] = None,
+                                     block_t: int = 512,
+                                     interpret: bool = False):
+    """Partial-softmax flash decode over one local KV block.
+
+    q: (B,H,D); caches: (B,T,KV,D) with T % block_t == 0; ``bounds``:
+    (2,) int32 — (upper, lower) LOCAL column bounds (columns attend iff
+    ``lower < col <= upper``; the caller folds the shard offset and any
+    sliding window into them). Returns fp32 ``(num (B,KV,G,D),
+    den (B,KV,G), m (B,KV,G))`` matching ``decode_attention_partials_ref``.
+    """
+    b, h, d = q.shape
+    t, kv = k_cache.shape[1], k_cache.shape[2]
+    group = h // kv
+    n_t = t // block_t
+    scale = 1.0 / (d ** 0.5)
+
+    qg = q.reshape(b, kv, group, d).transpose(0, 2, 1, 3)  # (B, group, KV, D)
+
+    kernel = functools.partial(
+        _kernel_partials, scale=scale, block_t=block_t, n_t=n_t,
+        group=group, softcap=softcap)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kv, n_t),
+        in_specs=[
+            pl.BlockSpec((1, group, 1, d),
+                         lambda bi, ki, ti, bounds: (bi, 0, ki, 0)),
+            pl.BlockSpec((1, block_t, 1, d),
+                         lambda bi, ki, ti, bounds: (bi, ti, ki, 0)),
+            pl.BlockSpec((1, block_t, 1, d),
+                         lambda bi, ki, ti, bounds: (bi, ti, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, group, 1, d),
+                         lambda bi, ki, ti, bounds: (bi, 0, ki, 0)),
+            pl.BlockSpec((1, group, 1),
+                         lambda bi, ki, ti, bounds: (bi, 0, ki)),
+            pl.BlockSpec((1, group, 1),
+                         lambda bi, ki, ti, bounds: (bi, 0, ki)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+    )
+
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, group, kv, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, group, kv), jnp.float32),
+            jax.ShapeDtypeStruct((b, group, kv), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="decode_attention_partials",
+    )(jnp.asarray(bounds, jnp.int32), qg, k_cache, v_cache)
+    return (acc.transpose(0, 2, 1, 3), l.transpose(0, 2, 1),
+            m.transpose(0, 2, 1))

@@ -1,4 +1,12 @@
-"""jit'd public wrapper for the flash-decode kernel."""
+"""jit'd public wrappers for the flash-decode kernels.
+
+``decode_attention`` is the normalized single-device entry point (what
+``attn_impl="pallas"`` decode dispatches to). ``decode_attention_partials``
+is the per-shard building block of the sequence-sharded path: it returns
+the raw (num, den, m) online-softmax state so ``dist.collectives`` can
+psum-combine partials across the "model" axis. Both fall back to the jnp
+reference for tiny caches and default to interpret mode off-TPU.
+"""
 from __future__ import annotations
 
 from typing import Optional
@@ -6,9 +14,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention.decode_attention import \
-    decode_attention_kernel
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention_kernel, decode_attention_partials_kernel)
+from repro.kernels.decode_attention.ref import (decode_attention_partials_ref,
+                                                decode_attention_ref)
 
 
 def decode_attention(q, k_cache, v_cache, length, *,
@@ -34,3 +43,41 @@ def decode_attention(q, k_cache, v_cache, length, *,
     return decode_attention_kernel(
         q, k_cache, v_cache, length, window=window, softcap=softcap,
         block_t=block_t, interpret=interpret)
+
+
+def decode_attention_partials(q, k_cache, v_cache, length, *,
+                              offset=0,
+                              window: Optional[int] = None,
+                              softcap: Optional[float] = None,
+                              block_t: int = 512,
+                              interpret: Optional[bool] = None):
+    """Flash-decode partials over one (possibly sequence-shard-local) block.
+
+    q: (B,H,D); caches: (B,Sl,KV,D); global kv position of local row t is
+    ``offset + t`` (``offset`` may be traced, e.g. ``axis_index * Sl``
+    inside shard_map). Returns fp32 ``(num (B,KV,G,D), den (B,KV,G),
+    m (B,KV,G))`` — the same contract as ``decode_attention_partials_ref``.
+    """
+    t = k_cache.shape[1]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if t < 64:
+        return decode_attention_partials_ref(
+            q, k_cache, v_cache, length, offset=offset, window=window,
+            softcap=softcap)
+    block_t = min(block_t, t)
+    pad = (-t) % block_t
+    if pad:
+        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k_cache = jnp.pad(k_cache, widths)
+        v_cache = jnp.pad(v_cache, widths)
+    # local column bounds: cap the causal bound at the unpadded block end
+    # (a fully-covered shard must not attend into the zero padding), and
+    # fold the sliding window into the lower bound.
+    local = jnp.asarray(length, jnp.int32) - jnp.asarray(offset, jnp.int32)
+    upper = jnp.minimum(local, t - 1)
+    lower = local - window if window is not None else jnp.int32(-2 ** 30)
+    bounds = jnp.stack([upper, jnp.asarray(lower, jnp.int32)])
+    return decode_attention_partials_kernel(
+        q, k_cache, v_cache, bounds, softcap=softcap, block_t=block_t,
+        interpret=interpret)

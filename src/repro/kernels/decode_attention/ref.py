@@ -1,4 +1,11 @@
-"""Pure-jnp oracle for the decode-attention kernel."""
+"""Pure-jnp oracles for the decode-attention kernels.
+
+``decode_attention_ref`` is the normalized-output oracle for the fused
+flash-decode kernel. ``decode_attention_partials_ref`` is the oracle for
+the partial-softmax variant that ``dist.collectives`` combines across
+sequence shards — it is also the CPU fallback that path runs in
+production when the Pallas kernel is unavailable.
+"""
 from __future__ import annotations
 
 from typing import Optional
@@ -33,3 +40,37 @@ def decode_attention_ref(q, k_cache, v_cache, length, *,
     p = jax.nn.softmax(logits, axis=-1)
     o = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
     return o.reshape(b, h, d).astype(q.dtype)
+
+
+def decode_attention_partials_ref(q, k_blk, v_blk, length, *,
+                                  offset=0,
+                                  window: Optional[int] = None,
+                                  softcap: Optional[float] = None):
+    """Flash-decode partials over one KV block (pure jnp).
+
+    q: (B,H,D); k_blk/v_blk: (B,Sl,KV,D); the global kv position of local
+    row t is ``offset + t``. Returns ``(num (B,KV,G,D), den (B,KV,G),
+    m (B,KV,G))`` — all fp32 — such that softmax attention over the union
+    of blocks is ``sum_i(num_i·e^{m_i-M}) / sum_i(den_i·e^{m_i-M})`` with
+    ``M = max_i(m_i)``. One block alone normalizes to ``num/den``.
+    """
+    b, h, d = q.shape
+    kv = k_blk.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bkgh,btkh->bkgt", qg,
+                        k_blk.astype(jnp.float32)) / (d ** 0.5)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    pos = offset + jnp.arange(k_blk.shape[1])
+    mask = pos <= length
+    if window is not None:
+        mask = mask & (pos > length - window)
+    logits = jnp.where(mask[None, None, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1)  # (B,KV,G); NEG_INF on all-masked blocks
+    p = jnp.exp(logits - m[..., None])
+    # all-masked block: logits - m == 0 would give weight 1 — zero it out
+    p = jnp.where(mask[None, None, None, :], p, 0.0)
+    den = jnp.sum(p, axis=-1)
+    num = jnp.einsum("bkgt,btkh->bkgh", p, v_blk.astype(jnp.float32))
+    return num, den, m

@@ -8,6 +8,11 @@ Fig. 2 makes, plus fault-tolerance statistics if faults are injected.
 Usage:
   python -m repro.launch.serve --n-items 256 --batch-size 32 \
       --concurrency 8 --crash-prob 0.1
+
+Mesh mode: ``--mesh DxM`` (e.g. ``--mesh 2x4`` over 8 host devices, or
+on TPU the real chips) lays a ("data", "model") mesh under every worker's
+engine — params in the planner layout, inputs batch-sharded, and with
+``--seq-shard`` the decode KV cache sequence-sharded over "model".
 """
 from __future__ import annotations
 
@@ -37,12 +42,23 @@ def main(argv=None):
     ap.add_argument("--crash-prob", type=float, default=0.0)
     ap.add_argument("--straggler-prob", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help='("data", "model") mesh shape, e.g. "2x4"; '
+                         "requires that many local devices")
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="sequence-shard decode KV caches over 'model'")
     args = ap.parse_args(argv)
 
+    mesh = None
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.lower().split("x"))
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(shape, ("data", "model"))
     cfg = configs.smoke(args.arch)
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    engine = Engine(model, RunConfig())
+    engine = Engine(model, RunConfig(), mesh=mesh, seq_shard=args.seq_shard)
+    params = engine.shard_params(params)
 
     tokens, labels = imdb_reviews(n=args.n_items, seq_len=args.seq_len,
                                   vocab=cfg.vocab_size, seed=args.seed)
@@ -65,7 +81,8 @@ def main(argv=None):
           f"{len(chunks)} chunks ==")
 
     mono = MonolithicRunner(store, MonolithicConfig(),
-                            injector=injector).run(job, chunks, mk)
+                            injector=injector).run(job, chunks, mk,
+                                                   data=data)
     print(f"monolithic: wall={mono.wall_time_s:.1f}s "
           f"cost=${mono.cost_usd:.6f} chains={mono.n_invocations} "
           f"crashes={mono.n_crashes}")

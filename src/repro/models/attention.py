@@ -7,8 +7,18 @@ RoPE or external positions, and cross-attention (encoder-decoder).
 ``impl`` dispatch:
   * "xla"       — pure jnp einsum path (reference; what the dry-run lowers)
   * "pallas"    — fused Pallas TPU kernels (kernels/flash_attention, decode)
-  * "seq_shard" — decode over a sequence-sharded KV cache via shard_map
-                  (dist.collectives.seq_sharded_decode)
+  * "seq_shard" — decode over a KV cache whose SEQUENCE dim is sharded
+                  over "model" (dist.collectives.seq_sharded_*; the
+                  per-shard block is itself the Pallas decode kernel on
+                  TPU). The cache must be in the
+                  ``dist.sharding.cache_shardings(..., seq_shard=True)``
+                  layout — ``serving.Engine(seq_shard=True)`` pins it.
+
+Sharding expectations (all mesh-optional — no mesh means replicated):
+activations arrive batch-sharded over the data axes; caches arrive in the
+``cache_shardings`` layout (kv-heads over "model" by default, seq over
+"model" under seq_shard); every constraint here goes through
+``dist.context.constrain`` so unsatisfiable axes drop instead of erroring.
 """
 from __future__ import annotations
 
@@ -164,6 +174,11 @@ def attend_decode(q, k_cache, v_cache, length, *,
 
     ``length`` (int32 scalar) = index of the current token; attends to
     kv positions j <= length (the new token's k/v must already be written).
+
+    Sharding: q is batch-sharded; under ``impl="seq_shard"`` the caches
+    must carry ``NamedSharding`` with the sequence dim over "model" (the
+    ``cache_shardings(seq_shard=True)`` layout) — the output returns
+    batch-sharded only. Other impls expect kv_heads over "model" at most.
     """
     if impl == "seq_shard":
         from repro.dist import collectives
@@ -200,7 +215,13 @@ def attend_decode(q, k_cache, v_cache, length, *,
 def attn_forward(cfg: ModelConfig, p, x, *, mixer: str, positions,
                  impl: str = "xla", mask_kind: str = "causal",
                  return_kv: bool = False):
-    """Full-sequence attention sublayer (no residual/norm — block handles)."""
+    """Full-sequence attention sublayer (no residual/norm — block handles).
+
+    x arrives batch-sharded (and seq-over-"model" under Megatron-SP);
+    q/k/v are re-constrained to heads-or-seq over "model" internally, so
+    callers never pre-shard projections. ``return_kv`` hands back the
+    unpadded (k, v) for prefill cache construction.
+    """
     q, k, v = project_qkv(cfg, p, x)
     if cfg.pos == "rope":
         q = apply_rope(q, positions, cfg.rope_theta)
@@ -219,7 +240,11 @@ def attn_decode_layer(cfg: ModelConfig, p, x, k_cache, v_cache, length, *,
                       mixer: str, impl: str = "xla"):
     """Decode sublayer: project, write new kv at ``length``, attend.
 
-    Returns (y, new_k_cache, new_v_cache).
+    Returns (y, new_k_cache, new_v_cache) — the caches come back in the
+    layout they arrived in. Under ``impl="seq_shard"`` the write happens
+    inside the shard that owns global row ``length`` (fused with the
+    attention in one shard_map), so SPMD never gathers the cache around
+    the update; other impls use a plain dynamic_update_slice.
     """
     q, k, v = project_qkv(cfg, p, x)  # q,k,v: (B,1,·,hd)
     if cfg.pos == "rope":

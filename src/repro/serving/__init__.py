@@ -1,4 +1,9 @@
-"""Serving substrate: engine, sampler, continuous batching."""
-from repro.serving.batching import Request, SlotScheduler  # noqa: F401
+"""Serving substrate: engine, sampler, continuous batching.
+
+See serving/README.md for the Engine compilation-cache contract, the
+SlotScheduler admission protocol, and the mesh / sharding knobs.
+"""
+from repro.serving.batching import (ContinuousBatcher, Request,  # noqa: F401
+                                    SlotScheduler)
 from repro.serving.engine import Engine, timed  # noqa: F401
 from repro.serving.sampler import sample  # noqa: F401

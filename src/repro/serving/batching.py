@@ -1,16 +1,30 @@
 """Continuous batching: slot-based admission over a shared decode step.
 
-A fixed number of decode slots share one compiled decode executable; new
-requests are admitted into freed slots between steps (the vLLM-style
-scheduling idea at the granularity this framework needs). Used by the
-serve_cluster example and the serving benchmarks.
+A fixed number of decode slots share the engine's compiled decode
+executables; new requests are admitted into freed slots between steps
+(the vLLM-style scheduling idea at the granularity this framework needs).
+
+Two layers:
+  * ``SlotScheduler`` — pure bookkeeping (which slot serves which
+    request); no arrays, no device state.
+  * ``ContinuousBatcher`` — drives a (possibly mesh-aware) ``Engine``
+    through the prefill→decode handoff under that scheduling. Each slot
+    owns one request's decode cache, allocated by ``Engine.prefill`` in
+    the ``dist.sharding.cache_shardings`` layout; every decode step pins
+    cache in_sharding == out_sharding, so admission and eviction cycle
+    slots indefinitely without SPMD ever gathering a cache to one device
+    (asserted by tests/test_serving_sharded.py).
+
+Used by the serve_cluster example and the serving benchmarks.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import numpy as np
+
+from repro.serving.engine import Engine
 
 
 @dataclasses.dataclass
@@ -24,7 +38,20 @@ class Request:
 
 @dataclasses.dataclass
 class SlotScheduler:
-    """Tracks which decode slot serves which request."""
+    """Tracks which decode slot serves which request.
+
+    Admission protocol (what ``ContinuousBatcher`` drives):
+      1. ``submit(req)`` queues a request (FIFO).
+      2. ``admit()`` fills every free slot from the queue and returns the
+         newly-admitted slot ids — the caller prefills exactly these.
+      3. per decode round, ``step_done(slot, token)`` appends one token;
+         a request reaching ``max_new_tokens`` completes and frees its
+         slot (the caller drops that slot's cache — eviction).
+      4. ``idle`` when the queue is empty and every slot is free.
+
+    The scheduler never touches arrays: cache ownership lives with the
+    caller, keyed by slot id.
+    """
 
     n_slots: int
 
@@ -62,3 +89,71 @@ class SlotScheduler:
     @property
     def idle(self) -> bool:
         return not self.queue and all(s is None for s in self.slots)
+
+
+@dataclasses.dataclass
+class ContinuousBatcher:
+    """Slot-level continuous batching over a mesh-aware ``Engine``.
+
+    Per slot the batcher holds the request's decode cache (in the
+    engine's planned sharding — seq-sharded over "model" under
+    ``Engine(seq_shard=True)``) and its last sampled token. Admission
+    prefills into a free slot; each round decodes every active slot once;
+    completion drops the slot's cache. Greedy sampling (the serving
+    benchmarks' configuration).
+    """
+
+    engine: Engine
+    params: Any
+    n_slots: int = 4
+
+    def __post_init__(self):
+        self.scheduler = SlotScheduler(self.n_slots)
+        self.caches: Dict[int, Any] = {}      # slot -> decode cache
+        self._last_tok: Dict[int, Any] = {}   # slot -> (1, 1) int32
+        self.decode_steps = 0
+
+    def submit(self, req: Request):
+        self.scheduler.submit(req)
+
+    def step(self) -> List[int]:
+        """One scheduling round: admit (prefill) + decode all active slots.
+
+        Returns the slot ids that were newly admitted this round.
+        """
+        import jax.numpy as jnp
+
+        admitted = self.scheduler.admit()
+        for slot in admitted:
+            req = self.scheduler.slots[slot]
+            logits, cache = self.engine.prefill(self.params,
+                                                req.prompt[None])
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            self.caches[slot] = cache
+            self._last_tok[slot] = tok
+            self._commit(slot, tok)
+        for slot in list(self.scheduler.active):
+            logits, cache = self.engine.decode(
+                self.params, self.caches[slot], self._last_tok[slot])
+            self.decode_steps += 1
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            self.caches[slot] = cache
+            self._last_tok[slot] = tok
+            self._commit(slot, tok)
+        return admitted
+
+    def _commit(self, slot: int, tok):
+        self.scheduler.step_done(slot, int(tok[0, 0]))
+        if self.scheduler.slots[slot] is None:  # completed -> evict
+            self.caches.pop(slot, None)
+            self._last_tok.pop(slot, None)
+
+    def run(self, max_rounds: int = 10_000) -> List[Request]:
+        """Drive rounds until every submitted request completes."""
+        rounds = 0
+        while not self.scheduler.idle:
+            self.step()
+            rounds += 1
+            if rounds > max_rounds:
+                raise RuntimeError("ContinuousBatcher did not drain")
+        return self.scheduler.completed

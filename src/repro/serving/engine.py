@@ -1,90 +1,268 @@
 """Inference engine: jit-compiled classify / prefill / decode / generate.
 
 This is the compute payload that the paper's "serverless functions" invoke
-(core/worker.py). On a pod it runs pjit-sharded; on this CPU container it
-runs single-device. Compilation is cached per (shape bucket) so repeated
-worker invocations hit warm executables — the cold/warm distinction that
-the cost model accounts for.
+(core/worker.py). The engine is mesh-aware end to end: constructed with a
+``mesh`` it plans param shardings (``dist.sharding.param_shardings``),
+allocates every KV cache in the ``dist.sharding.cache_shardings`` layout
+(sequence-sharded over "model" when ``seq_shard=True``), and pins the
+prefill→decode handoff with explicit ``jax.jit`` in/out shardings so the
+cache NEVER gathers to one device between steps. Without a mesh every
+knob degrades to the single-device behavior (how CI and laptop tests run).
+
+Compilation-cache / shape-bucket contract: every entry point routes
+through one executable cache keyed by (kind, input shape bucket).
+Repeated worker invocations with the same shapes hit warm executables —
+the cold/warm distinction the cost model accounts for — and
+``compile_count`` counts bucket misses, which tests and benchmarks use to
+assert executable reuse. See serving/README.md for the full contract.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from contextlib import nullcontext
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
 
+from repro.dist import context as dctx
+from repro.dist import sharding as shd
 from repro.models.common import RunConfig
 from repro.models.model_zoo import Model
 from repro.serving.sampler import sample
 
 
+def _shape_key(tree) -> tuple:
+    """Hashable shape/dtype bucket for a pytree of arrays or structs."""
+    return tuple((tuple(l.shape), jnp.dtype(l.dtype).name)
+                 for l in jax.tree.leaves(tree))
+
+
 @dataclasses.dataclass
 class Engine:
+    """Serving engine over one built model.
+
+    Args:
+      model: ``models.build(cfg)`` facade.
+      run: runtime knobs; ``run.attn_impl`` is forced to ``"seq_shard"``
+        when ``seq_shard=True`` under a mesh (the cache layout and the
+        attention collective must agree).
+      donate_cache: donate the decode cache buffer to each step (the
+        in-place KV update; keeps decode HBM traffic at one token).
+      mesh: optional ``jax.sharding.Mesh``. When set, all public entry
+        points run under ``dist.mesh_context(mesh)`` and accept/produce
+        ``NamedSharding``-annotated arrays: params in the planner layout,
+        inputs batch-sharded over the data axes, caches in the
+        ``cache_shardings`` layout.
+      strategy: param-sharding strategy ("tp" | "fsdp" | "fsdp_tp");
+        default auto-picks via ``dist.sharding.pick_strategy(kind=
+        "infer")``.
+      seq_shard: shard the KV-cache SEQUENCE dim over the "model" axis
+        (the layout ``dist.collectives.seq_sharded_*`` consumes) instead
+        of the default kv-heads layout.
+    """
+
     model: Model
     run: RunConfig = RunConfig()
     donate_cache: bool = True
+    mesh: Optional[jax.sharding.Mesh] = None
+    strategy: Optional[str] = None
+    seq_shard: bool = False
 
     def __post_init__(self):
-        cfg = self.model.cfg
-        run = self.run
+        if self.mesh is not None:
+            if self.seq_shard and self.run.attn_impl != "seq_shard":
+                self.run = dataclasses.replace(self.run,
+                                               attn_impl="seq_shard")
+            if self.strategy is None:
+                self.strategy = shd.pick_strategy(
+                    self.model.param_specs, self.mesh, kind="infer")
+            self.params_sharding = shd.param_shardings(
+                self.model.param_specs, self.strategy, self.mesh)
+        else:
+            self.params_sharding = None
+        self._exec: Dict[Any, Any] = {}
+        self.compile_count = 0
 
+    # ------------------------------------------------------------------
+    # Mesh plumbing
+    # ------------------------------------------------------------------
+
+    def _ctx(self):
+        """Ambient-mesh context for every jit trace and device_put."""
+        return (dctx.mesh_context(self.mesh) if self.mesh is not None
+                else nullcontext())
+
+    def _batch_sharding(self, shape) -> Optional[NamedSharding]:
+        """Batch-dim-over-data-axes NamedSharding for an output leaf
+        (the same rule ``input_shardings`` applies to input leaves)."""
+        if self.mesh is None:
+            return None
+        return shd.input_shardings(
+            jax.ShapeDtypeStruct(shape, jnp.float32), self.mesh)
+
+    def shard_params(self, params):
+        """Place ``params`` in the planner layout (no-op without a mesh)."""
+        if self.mesh is None:
+            return params
+        with self._ctx():
+            return jax.device_put(params, self.params_sharding)
+
+    def shard_inputs(self, batch):
+        """Batch-shard input leaves over the data axes (dim 0)."""
+        batch = jax.tree.map(jnp.asarray, batch)
+        if self.mesh is None:
+            return batch
+        with self._ctx():
+            return jax.device_put(
+                batch, shd.input_shardings(batch, self.mesh))
+
+    def cache_sharding(self, cache):
+        """The planned NamedSharding tree for ``cache`` (None meshless).
+
+        This is the exact tree the decode executable pins as BOTH its
+        cache in_sharding and out_sharding — the invariant the sharded
+        handoff tests assert across admit/evict cycles.
+        """
+        if self.mesh is None:
+            return None
+        return shd.cache_shardings(cache, self.model.cfg, self.mesh,
+                                   seq_shard=self.seq_shard)
+
+    # ------------------------------------------------------------------
+    # Executable cache
+    # ------------------------------------------------------------------
+
+    def _get_exec(self, kind: str, key: tuple, build):
+        fn = self._exec.get((kind, key))
+        if fn is None:
+            fn = build()
+            self._exec[(kind, key)] = fn
+            self.compile_count += 1
+        return fn
+
+    def _jit_classify(self):
         def _classify(params, tokens):
-            logits, _ = self.model.forward(run, params, {"tokens": tokens})
+            logits, _ = self.model.forward(self.run, params,
+                                           {"tokens": tokens})
             return logits
+        return jax.jit(_classify)
 
-        def _forward_last(params, batch):
-            logits, _ = self.model.forward(run, params, batch)
-            return logits[:, -1] if logits.ndim == 3 else logits
-
+    def _jit_prefill(self, batch_shapes: dict, max_len: int):
         def _prefill(params, batch):
-            return self.model.prefill(run, params, batch)
+            return self.model.prefill(self.run, params, batch,
+                                      max_len=max_len)
+        if self.mesh is None:
+            return jax.jit(_prefill)
+        b = next(iter(batch_shapes.values()))[0]
+        cache_sh = self.cache_sharding(self.model.cache_specs(b, max_len))
+        logits_sh = self._batch_sharding((b, self.model.cfg.vocab_size))
+        return jax.jit(_prefill, out_shardings=(logits_sh, cache_sh))
+
+    def _jit_decode(self, cache):
+        donate = (1,) if self.donate_cache else ()
 
         def _decode(params, cache, token):
-            return self.model.decode_step(run, params, cache,
+            return self.model.decode_step(self.run, params, cache,
                                           {"token": token})
-
-        self._classify = jax.jit(_classify)
-        self._forward_last = jax.jit(_forward_last)
-        self._prefill = jax.jit(_prefill)
-        self._decode = jax.jit(
-            _decode, donate_argnums=(1,) if self.donate_cache else ())
-        self.compile_count = 0
-        self._compiled_shapes = set()
+        if self.mesh is None:
+            return jax.jit(_decode, donate_argnums=donate)
+        cache_sh = self.cache_sharding(cache)
+        b = token_b = jax.tree.leaves(cache)[0].shape[1]
+        logits_sh = self._batch_sharding((b, self.model.cfg.vocab_size))
+        tok_sh = self._batch_sharding((token_b, 1))
+        return jax.jit(_decode, donate_argnums=donate,
+                       in_shardings=(self.params_sharding, cache_sh,
+                                     tok_sh),
+                       out_shardings=(logits_sh, cache_sh))
 
     # ------------------------------------------------------------------
+    # Classification (the paper's sentiment inference)
+    # ------------------------------------------------------------------
+
     def classify(self, params, tokens) -> np.ndarray:
-        """Batched classification (the paper's sentiment inference)."""
-        shape = tuple(tokens.shape)
-        if shape not in self._compiled_shapes:
-            self._compiled_shapes.add(shape)
-            self.compile_count += 1
-        logits = self._classify(params, jnp.asarray(tokens))
-        return np.asarray(jnp.argmax(logits, axis=-1))
+        """Batched classification. tokens: (B, S) int32 -> (B,) labels.
+
+        Under a mesh, ``params`` may arrive in any layout (use
+        ``shard_params`` once to place them); tokens are batch-sharded
+        here and the logits come back batch-sharded.
+        """
+        return np.asarray(jnp.argmax(self.classify_logits(params, tokens),
+                                     axis=-1))
 
     def classify_logits(self, params, tokens) -> np.ndarray:
-        return np.asarray(self._classify(params, jnp.asarray(tokens)))
+        with self._ctx():
+            tokens = self.shard_inputs(tokens)
+            fn = self._get_exec("classify", _shape_key(tokens),
+                                self._jit_classify)
+            return np.asarray(fn(params, tokens))
 
     # ------------------------------------------------------------------
+    # Prefill / decode (the sharded handoff)
+    # ------------------------------------------------------------------
+
+    def prefill(self, params, tokens, *, max_len: Optional[int] = None
+                ) -> Tuple[jax.Array, Any]:
+        """tokens (B, S) -> (last-token logits (B, V), populated cache).
+
+        The cache comes back in the ``cache_shardings`` layout (seq-
+        sharded over "model" when ``seq_shard=True``) — exactly the
+        layout :meth:`decode` pins as its input, so the handoff never
+        reshards.
+        """
+        tokens = jnp.asarray(tokens)
+        b, s = tokens.shape
+        max_len = max_len or (s + self.run.cache_pad)
+        with self._ctx():
+            batch = self.shard_inputs({"tokens": tokens})
+            fn = self._get_exec(
+                "prefill", (_shape_key(batch), max_len),
+                lambda: self._jit_prefill({"tokens": (b, s)}, max_len))
+            return fn(params, batch)
+
+    def decode(self, params, cache, token) -> Tuple[jax.Array, Any]:
+        """One decode step; cache sharding is preserved bit-for-bit.
+
+        The executable is pinned with cache in_sharding == out_sharding
+        == ``cache_sharding(cache)`` and the buffer is donated, so slot
+        admission/eviction cycles around this call can never make SPMD
+        gather the cache to one device.
+        """
+        with self._ctx():
+            token = self.shard_inputs(jnp.asarray(token))
+            fn = self._get_exec("decode", _shape_key(cache),
+                                lambda: self._jit_decode(cache))
+            return fn(params, cache, token)
+
+    # ------------------------------------------------------------------
+    # Generation
+    # ------------------------------------------------------------------
+
     def generate(self, params, tokens, *, max_new_tokens: int = 16,
                  temperature: float = 0.0, seed: int = 0,
                  max_len: Optional[int] = None) -> np.ndarray:
-        """Greedy/temperature generation. tokens: (B, S) -> (B, S+new)."""
+        """Greedy/temperature generation. tokens: (B, S) -> (B, S+new).
+
+        Runs the sharded prefill→decode handoff: the cache stays in the
+        planner layout for every step; only sampled tokens (B, 1) and the
+        final concatenation touch the host.
+        """
         tokens = jnp.asarray(tokens)
-        b, s = tokens.shape
-        logits, cache = self._prefill(params, {"tokens": tokens})
-        key = jax.random.PRNGKey(seed)
-        outs = [tokens]
-        tok = sample(logits, key, temperature=temperature)[:, None]
-        for i in range(max_new_tokens - 1):
+        with self._ctx():
+            logits, cache = self.prefill(params, tokens, max_len=max_len)
+            key = jax.random.PRNGKey(seed)
+            outs = [tokens]
+            tok = sample(logits, key, temperature=temperature)[:, None]
+            for _ in range(max_new_tokens - 1):
+                outs.append(tok)
+                key, sub = jax.random.split(key)
+                logits, cache = self.decode(params, cache, tok)
+                tok = sample(logits, sub, temperature=temperature)[:, None]
             outs.append(tok)
-            key, sub = jax.random.split(key)
-            logits, cache = self._decode(params, cache, tok)
-            tok = sample(logits, sub, temperature=temperature)[:, None]
-        outs.append(tok)
-        return np.asarray(jnp.concatenate(outs, axis=1))
+            return np.asarray(jnp.concatenate(outs, axis=1))
 
 
 def timed(fn, *args, **kwargs) -> Tuple[Any, float]:

@@ -1,0 +1,231 @@
+"""Sharded prefill→decode handoff + Pallas-fused seq-shard parity.
+
+Fast tier (single device): a one-device ("data", "model") mesh exercises
+every mesh-aware Engine code path — plan computation, pinned jit in/out
+shardings, executable shape-bucketing, ContinuousBatcher admit/evict —
+and the Pallas partials kernel runs in interpret mode against the jnp
+reference (the exact fallback the seq-shard collective uses on CPU).
+
+Slow tier: an 8-host-device subprocess pins the real layout — the KV
+sequence dim sharded over "model" per ``cache_shardings``, preserved
+bit-for-bit by every decode step across admit/evict cycles, with token
+parity against the meshless engine.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import textwrap
+
+from conftest import run_in_subprocess
+from repro import configs
+from repro.dist import collectives
+from repro.kernels.decode_attention import ops as da_ops
+from repro.kernels.decode_attention import ref as da_ref
+from repro.models import RunConfig, build
+from repro.serving import ContinuousBatcher, Engine, Request
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = configs.smoke("qwen2-7b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _one_device_mesh():
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _assert_cache_matches_plan(engine, cache):
+    plan = engine.cache_sharding(cache)
+    eq = jax.tree.map(lambda leaf, sh: leaf.sharding == sh, cache, plan)
+    assert all(jax.tree.leaves(eq)), (
+        "decode cache left the cache_shardings layout")
+
+
+# ---------------------------------------------------------------------------
+# Mesh-aware Engine: sharded handoff
+# ---------------------------------------------------------------------------
+
+
+def test_engine_seq_shard_forces_attn_impl(small_lm):
+    _, model, _ = small_lm
+    engine = Engine(model, RunConfig(), mesh=_one_device_mesh(),
+                    seq_shard=True)
+    assert engine.run.attn_impl == "seq_shard"
+    assert engine.strategy is not None  # auto-picked
+
+
+def test_engine_cache_sharding_across_admit_evict(small_lm):
+    """Decode-step cache sharding == cache_shardings(...) output through
+    ContinuousBatcher admit/evict cycles (the tentpole invariant)."""
+    cfg, model, params = small_lm
+    engine = Engine(model, RunConfig(cache_pad=56),
+                    mesh=_one_device_mesh(), seq_shard=True)
+    sp = engine.shard_params(params)
+
+    logits, cache = engine.prefill(sp, np.ones((2, 8), np.int32))
+    _assert_cache_matches_plan(engine, cache)
+    for _ in range(3):
+        logits, cache = engine.decode(sp, cache, np.ones((2, 1), np.int32))
+        _assert_cache_matches_plan(engine, cache)
+
+    batcher = ContinuousBatcher(engine, sp, n_slots=2)
+    rng = np.random.default_rng(0)
+    for rid in range(5):  # 5 requests over 2 slots -> several evict cycles
+        batcher.submit(Request(rid, rng.integers(0, cfg.vocab_size, 8),
+                               max_new_tokens=int(rng.integers(1, 4))))
+    rounds = 0
+    while not batcher.scheduler.idle:
+        batcher.step()
+        rounds += 1
+        for slot, c in batcher.caches.items():
+            _assert_cache_matches_plan(engine, c)
+        assert rounds < 100
+    assert len(batcher.scheduler.completed) == 5
+
+
+def test_engine_mesh_generate_matches_meshless(small_lm):
+    _, model, params = small_lm
+    prompt = np.ones((2, 8), np.int32)
+    ref = Engine(model, RunConfig(cache_pad=56)).generate(
+        params, prompt, max_new_tokens=4)
+    engine = Engine(model, RunConfig(cache_pad=56),
+                    mesh=_one_device_mesh(), seq_shard=True)
+    out = engine.generate(engine.shard_params(params), prompt,
+                          max_new_tokens=4)
+    assert (ref == out).all()
+
+
+def test_engine_executable_bucket_reuse(small_lm):
+    """Same shapes hit warm executables; new shapes open new buckets."""
+    _, model, params = small_lm
+    engine = Engine(model, RunConfig(cache_pad=56))
+    prompt = np.ones((2, 8), np.int32)
+    engine.generate(params, prompt, max_new_tokens=3)
+    n = engine.compile_count
+    assert n >= 2  # one prefill + one decode bucket
+    engine.generate(params, prompt, max_new_tokens=5)
+    assert engine.compile_count == n  # warm: same buckets
+    engine.generate(params, np.ones((2, 12), np.int32), max_new_tokens=3)
+    assert engine.compile_count > n  # new prompt length -> new buckets
+
+
+# ---------------------------------------------------------------------------
+# Pallas-fused vs pure-jnp seq-shard decode (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("length,offset,window,cap", [
+    (100, 0, None, None),    # plain causal
+    (100, 64, None, None),   # shard offset: partial coverage
+    (10, 128, None, None),   # shard fully past length -> neutral element
+    (300, 0, None, None),    # shard fully covered (pad must stay masked)
+    (37, 0, 16, 20.0),       # sliding window + softcap
+    (255, 128, 64, None),    # window crossing the shard boundary
+])
+def test_partials_kernel_matches_ref(length, offset, window, cap):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, 8, 32))
+    kc = jax.random.normal(ks[1], (2, 128, 2, 32))
+    vc = jax.random.normal(ks[2], (2, 128, 2, 32))
+    num, den, m = da_ops.decode_attention_partials(
+        q, kc, vc, jnp.int32(length), offset=jnp.int32(offset),
+        window=window, softcap=cap, block_t=64, interpret=True)
+    rn, rd, rm = da_ref.decode_attention_partials_ref(
+        q, kc, vc, jnp.int32(length), offset=offset, window=window,
+        softcap=cap)
+    assert float(jnp.max(jnp.abs(num - rn))) < 1e-4
+    assert float(jnp.max(jnp.abs(den - rd))) < 1e-4
+    assert float(jnp.max(jnp.abs(m - rm))) < 1e-4
+
+
+@pytest.mark.parametrize("window,cap", [(None, None), (32, None),
+                                        (None, 30.0)])
+def test_seq_shard_decode_fused_matches_jnp(window, cap):
+    """seq_sharded_write_decode: Pallas-fused block (interpret) == jnp."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    q = jax.random.normal(ks[0], (2, 1, 8, 32))
+    kn = jax.random.normal(ks[1], (2, 1, 2, 32))
+    vn = jax.random.normal(ks[2], (2, 1, 2, 32))
+    kc = jax.random.normal(ks[3], (2, 128, 2, 32))
+    vc = jax.random.normal(ks[4], (2, 128, 2, 32))
+    length = jnp.int32(77)
+    try:
+        collectives.set_fused_partials(False)
+        o_jnp, k_jnp, v_jnp = collectives.seq_sharded_write_decode(
+            q, kn, vn, kc, vc, length, window=window, cap=cap)
+        collectives.set_fused_partials(True)
+        o_pl, k_pl, v_pl = collectives.seq_sharded_write_decode(
+            q, kn, vn, kc, vc, length, window=window, cap=cap)
+    finally:
+        collectives.set_fused_partials(None)
+    assert float(jnp.max(jnp.abs(o_pl - o_jnp))) < 1e-5
+    assert (np.array(k_pl) == np.array(k_jnp)).all()
+    assert (np.array(v_pl) == np.array(v_jnp)).all()
+
+
+# ---------------------------------------------------------------------------
+# Slow tier: real multi-device layout
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_engine_seq_sharded_handoff_8dev():
+    out = run_in_subprocess(textwrap.dedent("""
+        import jax, numpy as np
+        from repro import configs
+        from repro.models import RunConfig, build
+        from repro.serving import ContinuousBatcher, Engine, Request
+
+        cfg = configs.smoke("qwen2-7b")
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        prompt = np.ones((4, 8), np.int32)
+        ref = Engine(model, RunConfig(cache_pad=56)).generate(
+            params, prompt, max_new_tokens=4)
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        engine = Engine(model, RunConfig(cache_pad=56), mesh=mesh,
+                        seq_shard=True)
+        sp = engine.shard_params(params)
+        out = engine.generate(sp, prompt, max_new_tokens=4)
+        assert (ref == out).all()
+
+        logits, cache = engine.prefill(sp, prompt)
+        # the KV seq dim is REALLY sharded over "model" (rank-5 leaves:
+        # groups, batch, seq, kv_heads, head_dim)
+        kv = cache.layers[0]["k"]
+        assert kv.sharding.spec[2] == "model", kv.sharding.spec
+        plan = engine.cache_sharding(cache)
+        logits, cache = engine.decode(sp, cache, np.ones((4, 1), np.int32))
+        eq = jax.tree.map(lambda l, s: l.sharding == s, cache, plan)
+        assert all(jax.tree.leaves(eq))
+
+        e0 = Engine(model, RunConfig(cache_pad=56))
+        batcher = ContinuousBatcher(engine, sp, n_slots=2)
+        rng = np.random.default_rng(0)
+        reqs = [Request(i, rng.integers(0, cfg.vocab_size, 8),
+                        max_new_tokens=3) for i in range(4)]
+        for r in reqs:
+            batcher.submit(r)
+        rounds = 0
+        while not batcher.scheduler.idle:
+            batcher.step()
+            rounds += 1
+            for slot, c in batcher.caches.items():
+                sh = engine.cache_sharding(c)
+                eq = jax.tree.map(lambda l, s: l.sharding == s, c, sh)
+                assert all(jax.tree.leaves(eq))
+            assert rounds < 50
+        for r in batcher.scheduler.completed:
+            exp = e0.generate(params, r.prompt[None], max_new_tokens=3)
+            assert list(exp[0, 8:]) == r.generated
+        print("ENGINE_SEQ_SHARD_OK")
+    """), n_devices=8)
+    assert "ENGINE_SEQ_SHARD_OK" in out

@@ -1,0 +1,51 @@
+"""Check that relative markdown links in the repo's docs resolve.
+
+Scans every tracked ``*.md`` file, extracts ``[text](target)`` links,
+and verifies each relative target exists on disk (anchors stripped;
+http(s)/mailto links skipped). Exits 1 listing every broken link.
+
+    python tools/check_links.py [root]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+SKIP_DIRS = {".git", "artifacts", "__pycache__", ".pytest_cache"}
+
+
+def iter_md_files(root: pathlib.Path):
+    for p in sorted(root.rglob("*.md")):
+        if not SKIP_DIRS.intersection(p.relative_to(root).parts):
+            yield p
+
+
+def check(root: pathlib.Path) -> int:
+    broken = []
+    n_links = 0
+    for md in iter_md_files(root):
+        for target in LINK_RE.findall(md.read_text()):
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            n_links += 1
+            path = target.split("#")[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                broken.append(f"{md.relative_to(root)}: {target}")
+    print(f"checked {n_links} relative links")
+    if broken:
+        print("BROKEN LINKS:")
+        for b in broken:
+            print(f"  {b}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".")
+    sys.exit(check(root.resolve()))
