@@ -38,10 +38,12 @@ for rid in range(24):
     batcher.submit(Request(rid, rng.integers(0, cfg.vocab_size, 8),
                            max_new_tokens=int(rng.integers(4, 12))))
 completed = batcher.run()
-print(f"  completed {len(completed)} requests in {batcher.decode_steps} "
-      f"decode steps across {len(engine._exec)} compiled executables "
-      f"(slot reuse = continuous batching; caches stay in the "
-      f"cache_shardings layout through every admit/evict)")
+print(f"  completed {len(completed)} requests: {batcher.decode_steps} "
+      f"slot-steps of decode in only {batcher.decode_dispatches} batched "
+      f"dispatches ({batcher.rounds} rounds — ONE shared ragged KV cache, "
+      f"one dispatch per round) across {len(engine._exec)} compiled "
+      f"executables; the cache stays in the cache_shardings layout "
+      f"through every admit/evict")
 
 # --- orchestrated generation job under faults -------------------------------
 print("\n== orchestrated generation job with injected faults ==")

@@ -5,9 +5,11 @@ over a KV cache whose SEQUENCE dim is sharded across the "model" axis.
 Each shard computes a flash-style partial softmax over its local cache
 block (running max, exp-sum, weighted values) and the shards combine with
 one pmax + two psums — the cache never materializes unsharded. The write
-variant also writes the new token's K/V into whichever shard owns global
-position ``length``, shard-locally, so SPMD can't decide to all-gather
-the cache around the update.
+variant also writes each row's new K/V into whichever shard owns that
+row's global position ``lengths[b]``, shard-locally, so SPMD can't decide
+to all-gather the cache around the update. ``lengths`` is scalar or (B,)
+— per-row lengths are what let one shared batched cache serve ragged
+continuous-batching rows in a single dispatch.
 
 The per-shard block is the ``kernels/decode_attention`` Pallas kernel
 (``decode_attention_partials``) on TPU; off-TPU it runs the identical
@@ -62,13 +64,15 @@ def fused_partials_enabled() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _partial_decode(q, k_blk, v_blk, length, offset, window, cap):
+def _partial_decode(q, k_blk, v_blk, lengths, offset, window, cap):
     """Flash-decode partials over one cache block.
 
     q: (B,1,H,hd); k_blk/v_blk: (B,Sl,KV,hd); global kv position of local
-    row t is ``offset + t``. Returns (num (B,KV,G,hd), den (B,KV,G),
-    m (B,KV,G)) — all fp32 — such that softmax-attention over the union of
-    blocks is ``psum(num·e^{m-M}) / psum(den·e^{m-M})`` with M = pmax(m).
+    row t is ``offset + t``; ``lengths`` is scalar or (B,) — per-row
+    current indices for ragged batches. Returns (num (B,KV,G,hd),
+    den (B,KV,G), m (B,KV,G)) — all fp32 — such that softmax-attention
+    over the union of blocks is ``psum(num·e^{m-M}) / psum(den·e^{m-M})``
+    with M = pmax(m).
 
     Dispatches to the fused Pallas kernel when
     :func:`fused_partials_enabled` (interpret mode off-TPU), else to the
@@ -78,10 +82,10 @@ def _partial_decode(q, k_blk, v_blk, length, offset, window, cap):
     from repro.kernels.decode_attention import ref as da_ref
     if fused_partials_enabled():
         return da_ops.decode_attention_partials(
-            q[:, 0], k_blk, v_blk, length, offset=offset, window=window,
+            q[:, 0], k_blk, v_blk, lengths, offset=offset, window=window,
             softcap=cap)
     return da_ref.decode_attention_partials_ref(
-        q[:, 0], k_blk, v_blk, length, offset=offset, window=window,
+        q[:, 0], k_blk, v_blk, lengths, offset=offset, window=window,
         softcap=cap)
 
 
@@ -91,14 +95,22 @@ def _combine_local(q, num, den):
     return o.reshape(b, 1, h, hd).astype(q.dtype)
 
 
-def _write_at(cache, new, index):
-    """Write ``new`` (B,1,KV,hd) at row ``index`` iff 0 <= index < Sl."""
+def _write_at(cache, new, indices):
+    """Write ``new`` (B,1,KV,hd) at each row's local position
+    ``indices[b]`` iff 0 <= indices[b] < Sl (rows whose position lives on
+    another shard skip their write). ``indices`` is scalar or (B,)."""
     sl = cache.shape[1]
-    in_range = (index >= 0) & (index < sl)
-    idx = jnp.clip(index, 0, sl - 1)
-    updated = jax.lax.dynamic_update_slice_in_dim(
-        cache, new.astype(cache.dtype), idx, axis=1)
-    return jnp.where(in_range, updated, cache)
+    indices = jnp.broadcast_to(jnp.asarray(indices, jnp.int32),
+                               (cache.shape[0],))
+
+    def one_row(c, n, i):
+        in_range = (i >= 0) & (i < sl)
+        idx = jnp.clip(i, 0, sl - 1)
+        updated = jax.lax.dynamic_update_slice_in_dim(
+            c, n.astype(c.dtype), idx, axis=0)
+        return jnp.where(in_range, updated, c)
+
+    return jax.vmap(one_row)(cache, new, indices)
 
 
 def _shard_plan(mesh, batch: int, seq: int):
@@ -124,18 +136,21 @@ def _shard_plan(mesh, batch: int, seq: int):
     return bspec, manual
 
 
-def seq_sharded_decode(q, k_cache, v_cache, length, *,
+def seq_sharded_decode(q, k_cache, v_cache, lengths, *,
                        window: Optional[int] = None,
                        cap: Optional[float] = None):
     """Decode attention over a sequence-sharded KV cache.
 
     q: (B,1,H,hd); caches (B,S,KV,hd) with S sharded over "model";
-    returns (B,1,H,hd), batch-sharded only. Matches
-    ``decode_attention_ref(q[:, 0], k_cache, v_cache, length)[:, None]``.
+    ``lengths`` scalar or (B,) — per-row current indices for ragged
+    batches. Returns (B,1,H,hd), batch-sharded only. Matches
+    ``decode_attention_ref(q[:, 0], k_cache, v_cache, lengths)[:, None]``.
     """
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32),
+                               (q.shape[0],))
     plan = _shard_plan(ctx.get_mesh(), q.shape[0], k_cache.shape[1])
     if plan is None:
-        num, den, _ = _partial_decode(q, k_cache, v_cache, length, 0,
+        num, den, _ = _partial_decode(q, k_cache, v_cache, lengths, 0,
                                       window, cap)
         return _combine_local(q, num, den)
     bspec, manual = plan
@@ -144,9 +159,9 @@ def seq_sharded_decode(q, k_cache, v_cache, length, *,
     rep = P(bspec, None, None, None)
     shc = P(bspec, "model", None, None)
 
-    def body(q, kc, vc, length):
+    def body(q, kc, vc, lengths):
         off = jax.lax.axis_index("model") * kc.shape[1]
-        num, den, m = _partial_decode(q, kc, vc, length, off, window, cap)
+        num, den, m = _partial_decode(q, kc, vc, lengths, off, window, cap)
         m_g = jax.lax.pmax(m, "model")
         scale = jnp.exp(m - m_g)
         num = jax.lax.psum(num * scale[..., None], "model")
@@ -154,25 +169,28 @@ def seq_sharded_decode(q, k_cache, v_cache, length, *,
         return _combine_local(q, num, den)
 
     return compat.shard_map(
-        body, mesh=mesh, in_specs=(rep, shc, shc, P()), out_specs=rep,
-        axis_names=manual, check_vma=False)(q, k_cache, v_cache, length)
+        body, mesh=mesh, in_specs=(rep, shc, shc, P(bspec)), out_specs=rep,
+        axis_names=manual, check_vma=False)(q, k_cache, v_cache, lengths)
 
 
-def seq_sharded_write_decode(q, k_new, v_new, k_cache, v_cache, length, *,
+def seq_sharded_write_decode(q, k_new, v_new, k_cache, v_cache, lengths, *,
                              window: Optional[int] = None,
                              cap: Optional[float] = None):
     """Fused cache-write + decode attention over a sequence-sharded cache.
 
-    Writes k_new/v_new (B,1,KV,hd) at global row ``length`` — inside the
-    shard that owns it — then attends q over the updated cache (positions
-    <= length). Returns (out (B,1,H,hd), new_k_cache, new_v_cache); the
-    caches keep their (B, S/"model", KV, hd) sharding.
+    Writes k_new/v_new (B,1,KV,hd) at each row's global position
+    ``lengths[b]`` — inside the shard that owns it — then attends q over
+    the updated cache (row b sees positions <= lengths[b]). ``lengths``
+    is scalar or (B,). Returns (out (B,1,H,hd), new_k_cache,
+    new_v_cache); the caches keep their (B, S/"model", KV, hd) sharding.
     """
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32),
+                               (q.shape[0],))
     plan = _shard_plan(ctx.get_mesh(), q.shape[0], k_cache.shape[1])
     if plan is None:
-        kc = _write_at(k_cache, k_new, length)
-        vc = _write_at(v_cache, v_new, length)
-        num, den, _ = _partial_decode(q, kc, vc, length, 0, window, cap)
+        kc = _write_at(k_cache, k_new, lengths)
+        vc = _write_at(v_cache, v_new, lengths)
+        num, den, _ = _partial_decode(q, kc, vc, lengths, 0, window, cap)
         return _combine_local(q, num, den), kc, vc
     bspec, manual = plan
     mesh = ctx.get_mesh()
@@ -180,11 +198,11 @@ def seq_sharded_write_decode(q, k_new, v_new, k_cache, v_cache, length, *,
     rep = P(bspec, None, None, None)
     shc = P(bspec, "model", None, None)
 
-    def body(q, kn, vn, kc, vc, length):
+    def body(q, kn, vn, kc, vc, lengths):
         off = jax.lax.axis_index("model") * kc.shape[1]
-        kc = _write_at(kc, kn, length - off)
-        vc = _write_at(vc, vn, length - off)
-        num, den, m = _partial_decode(q, kc, vc, length, off, window, cap)
+        kc = _write_at(kc, kn, lengths - off)
+        vc = _write_at(vc, vn, lengths - off)
+        num, den, m = _partial_decode(q, kc, vc, lengths, off, window, cap)
         m_g = jax.lax.pmax(m, "model")
         scale = jnp.exp(m - m_g)
         num = jax.lax.psum(num * scale[..., None], "model")
@@ -193,10 +211,10 @@ def seq_sharded_write_decode(q, k_new, v_new, k_cache, v_cache, length, *,
 
     return compat.shard_map(
         body, mesh=mesh,
-        in_specs=(rep, rep, rep, shc, shc, P()),
+        in_specs=(rep, rep, rep, shc, shc, P(bspec)),
         out_specs=(rep, shc, shc),
         axis_names=manual, check_vma=False)(
-            q, k_new, v_new, k_cache, v_cache, length)
+            q, k_new, v_new, k_cache, v_cache, lengths)
 
 
 # ---------------------------------------------------------------------------

@@ -207,7 +207,9 @@ def cache_shardings(cache, cfg, mesh, *, seq_shard: bool = False):
     when ``seq_shard``, the sequence dim over "model" (the layout
     ``collectives.seq_sharded_*`` consumes); otherwise kv_heads go over
     "model" when divisible. All other leaves (SSM conv/state buffers)
-    shard batch only. Scalars (the cache length) replicate.
+    shard batch only. The per-row ``lengths`` vector — the rank-1 (B,)
+    leaf — shards batch over the data axes like every other batch dim;
+    scalars replicate.
     """
     dp = ctx.dp_axes(mesh)
     dpe = dp if dp else None
@@ -222,9 +224,10 @@ def cache_shardings(cache, cfg, mesh, *, seq_shard: bool = False):
                 spec = P(*lead, dpe, "model", None, None)
             else:
                 spec = P(*lead, dpe, None, "model", None)
+        elif n == 1:  # (B,) per-row lengths
+            spec = P(dpe)
         else:
-            lead = (None,) * (n - 2) if n >= 2 else ()
-            spec = P(*lead, dpe) if n >= 2 else P(None)
+            spec = P(*((None,) * (n - 2)), dpe)
         return NamedSharding(mesh, sanitize_spec(spec, x.shape, mesh))
 
     def is_kv_leaf(x):
@@ -234,8 +237,11 @@ def cache_shardings(cache, cfg, mesh, *, seq_shard: bool = False):
         n = len(x.shape)
         if n == 0:
             return NamedSharding(mesh, P())
-        # leaves lead with (groups, batch, ...)
-        spec = P(None, dpe, *([None] * (n - 2))) if n >= 2 else P(None)
+        if n == 1:  # (B,) per-row lengths
+            spec = P(dpe)
+        else:
+            # leaves lead with (groups, batch, ...)
+            spec = P(None, dpe, *([None] * (n - 2)))
         return NamedSharding(mesh, sanitize_spec(spec, x.shape, mesh))
 
     # distinguish attention KV blocks from SSM state by pattern position
@@ -251,6 +257,6 @@ def cache_shardings(cache, cfg, mesh, *, seq_shard: bool = False):
             else:
                 sh_layers.append(jax.tree.map(batch_only, layer))
         return type(cache)(layers=tuple(sh_layers),
-                           length=NamedSharding(mesh, P()))
+                           lengths=batch_only(cache.lengths))
     return jax.tree.map(lambda x: one(x) if is_kv_leaf(x) else batch_only(x),
                         cache)

@@ -1,4 +1,5 @@
-"""Flash-decode Pallas TPU kernel: one query token vs a long KV cache.
+"""Flash-decode Pallas TPU kernel: one query token per row vs a long,
+possibly RAGGED, batched KV cache.
 
 Design:
   * grid = (batch, kv_heads, nT): the KV sequence is split into
@@ -7,10 +8,14 @@ Design:
   * All ``group = H/KV`` query heads of one kv head are processed together
     as the rows of a (group, D) matmul — on the MXU this turns GQA grouping
     into free row-parallelism instead of repeated KV reads.
-  * ``length`` arrives via PrefetchScalarGridSpec so the index map and the
-    in-kernel mask both see it; tiles strictly past ``length`` are skipped
-    by clamping the index map (they re-read the last valid tile and are
-    fully masked — no HBM traffic growth).
+  * ``lengths`` is a (B,) vector arriving via PrefetchScalarGridSpec so the
+    index map and the in-kernel mask both see it; each batch program masks
+    against ITS OWN row's length, and the KV index map clamps the tile
+    index at that row's last valid tile — tiles strictly past
+    ``lengths[b]`` re-read the last valid tile and are fully masked, so a
+    short row in a ragged batch costs ~``lengths[b]`` of HBM traffic, not
+    ``Smax`` (the per-row early exit that makes one shared batched cache
+    cheaper than per-slot dispatches).
 
 The same (m, l, acc) merge math is reused one level up by
 ``dist.collectives.seq_sharded_decode`` to combine per-chip partials of a
@@ -19,7 +24,8 @@ sequence-sharded cache — kernel intra-chip, psum-merge inter-chip. The
 instead of normalizing at the last tile it emits the raw (acc, l, m)
 online-softmax state, in the layout ``collectives._partial_decode``
 produces, so the per-shard block of the sequence-sharded path IS this
-kernel and the cross-chip combine stays one pmax + two psums.
+kernel and the cross-chip combine stays one pmax + two psums. Its bounds
+prefetch is (2, B) — per-row (upper, lower) local column bounds.
 """
 from __future__ import annotations
 
@@ -77,11 +83,23 @@ def _init_scratch(m_scr, l_scr, acc_scr, ti):
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
 
+def _clamp_tile(ti, last_valid, block_t: int):
+    """Clamp tile index ``ti`` at the tile holding ``last_valid``.
+
+    Used inside KV index maps: tiles past a row's own upper bound re-read
+    the row's last valid tile instead of streaming dead KV from HBM (the
+    re-read is free — Pallas skips the DMA when the block index repeats —
+    and the in-kernel column mask zeroes any contribution).
+    """
+    return jnp.minimum(ti, jnp.maximum(last_valid, 0) // block_t)
+
+
 def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             scale: float, block_t: int, n_t: int, group: int,
             window: Optional[int], softcap: Optional[float]):
+    bi = pl.program_id(0)
     ti = pl.program_id(2)
-    length = len_ref[0]
+    length = len_ref[bi]
     lower = length - window if window is not None else jnp.int32(-2 ** 30)
     _init_scratch(m_scr, l_scr, acc_scr, ti)
     _tile_update(q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr, ti=ti,
@@ -100,16 +118,18 @@ def _kernel_partials(bounds_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
                      n_t: int, group: int, softcap: Optional[float]):
     """Same tile loop as ``_kernel`` but emits raw (acc, l, m) partials.
 
-    ``bounds_ref`` prefetches (upper, lower): LOCAL column bounds with the
-    sequence-shard offset already subtracted, so a shard that owns no
-    valid position (upper < 0) produces the neutral element
-    (acc=0, l=0, m=NEG_INF) and drops out of the cross-shard combine.
+    ``bounds_ref`` prefetches a (2, B) array of per-row (upper, lower)
+    LOCAL column bounds with the sequence-shard offset already subtracted,
+    so a shard that owns no valid position for row b (upper < 0) produces
+    the neutral element (acc=0, l=0, m=NEG_INF) for that row and drops out
+    of the cross-shard combine.
     """
+    bi = pl.program_id(0)
     ti = pl.program_id(2)
     _init_scratch(m_scr, l_scr, acc_scr, ti)
     _tile_update(q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr, ti=ti,
-                 upper=bounds_ref[0], lower=bounds_ref[1], scale=scale,
-                 block_t=block_t, group=group, softcap=softcap)
+                 upper=bounds_ref[0, bi], lower=bounds_ref[1, bi],
+                 scale=scale, block_t=block_t, group=group, softcap=softcap)
 
     @pl.when(ti == n_t - 1)
     def _done():
@@ -121,11 +141,12 @@ def _kernel_partials(bounds_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 @functools.partial(
     jax.jit,
     static_argnames=("window", "softcap", "block_t", "interpret"))
-def decode_attention_kernel(q, k_cache, v_cache, length, *,
+def decode_attention_kernel(q, k_cache, v_cache, lengths, *,
                             window: Optional[int] = None,
                             softcap: Optional[float] = None,
                             block_t: int = 512, interpret: bool = False):
-    """q: (B,H,D); caches: (B,T,KV,D), T % block_t == 0; length: () int32."""
+    """q: (B,H,D); caches: (B,T,KV,D), T % block_t == 0; lengths: (B,)
+    int32 — row b attends kv positions <= lengths[b]."""
     b, h, d = q.shape
     t, kv = k_cache.shape[1], k_cache.shape[2]
     group = h // kv
@@ -139,16 +160,17 @@ def decode_attention_kernel(q, k_cache, v_cache, length, *,
         _kernel, scale=scale, block_t=block_t, n_t=n_t, group=group,
         window=window, softcap=softcap)
 
+    def kv_map(bi, ki, ti, lens):
+        return (bi, _clamp_tile(ti, lens[bi], block_t), ki, 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, kv, n_t),
         in_specs=[
             pl.BlockSpec((1, group, 1, d),
                          lambda bi, ki, ti, lens: (bi, 0, ki, 0)),
-            pl.BlockSpec((1, block_t, 1, d),
-                         lambda bi, ki, ti, lens: (bi, ti, ki, 0)),
-            pl.BlockSpec((1, block_t, 1, d),
-                         lambda bi, ki, ti, lens: (bi, ti, ki, 0)),
+            pl.BlockSpec((1, block_t, 1, d), kv_map),
+            pl.BlockSpec((1, block_t, 1, d), kv_map),
         ],
         out_specs=pl.BlockSpec((1, group, 1, d),
                                lambda bi, ki, ti, lens: (bi, 0, ki, 0)),
@@ -167,7 +189,7 @@ def decode_attention_kernel(q, k_cache, v_cache, length, *,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="decode_attention",
-    )(jnp.asarray(length, jnp.int32)[None], qg, k_cache, v_cache)
+    )(jnp.asarray(lengths, jnp.int32), qg, k_cache, v_cache)
     return out.transpose(0, 2, 1, 3).reshape(b, h, d)
 
 
@@ -180,10 +202,11 @@ def decode_attention_partials_kernel(q, k_cache, v_cache, bounds, *,
     """Partial-softmax flash decode over one local KV block.
 
     q: (B,H,D); caches: (B,T,KV,D) with T % block_t == 0; ``bounds``:
-    (2,) int32 — (upper, lower) LOCAL column bounds (columns attend iff
-    ``lower < col <= upper``; the caller folds the shard offset and any
-    sliding window into them). Returns fp32 ``(num (B,KV,G,D),
-    den (B,KV,G), m (B,KV,G))`` matching ``decode_attention_partials_ref``.
+    (2, B) int32 — per-row (upper, lower) LOCAL column bounds (row b
+    attends columns iff ``lower[b] < col <= upper[b]``; the caller folds
+    the shard offset and any sliding window into them). Returns fp32
+    ``(num (B,KV,G,D), den (B,KV,G), m (B,KV,G))`` matching
+    ``decode_attention_partials_ref``.
     """
     b, h, d = q.shape
     t, kv = k_cache.shape[1], k_cache.shape[2]
@@ -197,16 +220,17 @@ def decode_attention_partials_kernel(q, k_cache, v_cache, bounds, *,
         _kernel_partials, scale=scale, block_t=block_t, n_t=n_t,
         group=group, softcap=softcap)
 
+    def kv_map(bi, ki, ti, bounds):
+        return (bi, _clamp_tile(ti, bounds[0, bi], block_t), ki, 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, kv, n_t),
         in_specs=[
             pl.BlockSpec((1, group, 1, d),
                          lambda bi, ki, ti, bounds: (bi, 0, ki, 0)),
-            pl.BlockSpec((1, block_t, 1, d),
-                         lambda bi, ki, ti, bounds: (bi, ti, ki, 0)),
-            pl.BlockSpec((1, block_t, 1, d),
-                         lambda bi, ki, ti, bounds: (bi, ti, ki, 0)),
+            pl.BlockSpec((1, block_t, 1, d), kv_map),
+            pl.BlockSpec((1, block_t, 1, d), kv_map),
         ],
         out_specs=[
             pl.BlockSpec((1, group, 1, d),

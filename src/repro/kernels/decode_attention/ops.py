@@ -6,6 +6,12 @@ is the per-shard building block of the sequence-sharded path: it returns
 the raw (num, den, m) online-softmax state so ``dist.collectives`` can
 psum-combine partials across the "model" axis. Both fall back to the jnp
 reference for tiny caches and default to interpret mode off-TPU.
+
+``lengths`` is scalar-or-(B,) everywhere: a scalar broadcasts to every
+row (the single-request behavior); a (B,) vector makes the batch RAGGED —
+each row masks and early-exits against its own current index, which is
+how one shared batched KV cache serves slots at different positions in a
+single dispatch.
 """
 from __future__ import annotations
 
@@ -16,22 +22,27 @@ import jax.numpy as jnp
 
 from repro.kernels.decode_attention.decode_attention import (
     decode_attention_kernel, decode_attention_partials_kernel)
-from repro.kernels.decode_attention.ref import (decode_attention_partials_ref,
+from repro.kernels.decode_attention.ref import (_row_lengths,
+                                                decode_attention_partials_ref,
                                                 decode_attention_ref)
 
 
-def decode_attention(q, k_cache, v_cache, length, *,
+def decode_attention(q, k_cache, v_cache, lengths, *,
                      window: Optional[int] = None,
                      softcap: Optional[float] = None,
                      block_t: int = 512,
                      interpret: Optional[bool] = None):
-    """q: (B,H,D); caches: (B,T,KV,D); length: () int32. Returns (B,H,D)."""
+    """q: (B,H,D); caches: (B,T,KV,D); lengths: () or (B,) int32.
+
+    Returns (B,H,D); row b attends kv positions <= lengths[b].
+    """
     b, h, d = q.shape
     t = k_cache.shape[1]
+    lengths = _row_lengths(lengths, b)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if t < 64:
-        return decode_attention_ref(q, k_cache, v_cache, length,
+        return decode_attention_ref(q, k_cache, v_cache, lengths,
                                     window=window, softcap=softcap)
     block_t = min(block_t, t)
     pad = (-t) % block_t
@@ -39,13 +50,13 @@ def decode_attention(q, k_cache, v_cache, length, *,
         widths = ((0, 0), (0, pad), (0, 0), (0, 0))
         k_cache = jnp.pad(k_cache, widths)
         v_cache = jnp.pad(v_cache, widths)
-        # padded tail is masked in-kernel via `length` (< t always)
+        # padded tail is masked in-kernel via `lengths` (< t always)
     return decode_attention_kernel(
-        q, k_cache, v_cache, length, window=window, softcap=softcap,
+        q, k_cache, v_cache, lengths, window=window, softcap=softcap,
         block_t=block_t, interpret=interpret)
 
 
-def decode_attention_partials(q, k_cache, v_cache, length, *,
+def decode_attention_partials(q, k_cache, v_cache, lengths, *,
                               offset=0,
                               window: Optional[int] = None,
                               softcap: Optional[float] = None,
@@ -54,16 +65,19 @@ def decode_attention_partials(q, k_cache, v_cache, length, *,
     """Flash-decode partials over one (possibly sequence-shard-local) block.
 
     q: (B,H,D); caches: (B,Sl,KV,D); global kv position of local row t is
-    ``offset + t`` (``offset`` may be traced, e.g. ``axis_index * Sl``
-    inside shard_map). Returns fp32 ``(num (B,KV,G,D), den (B,KV,G),
-    m (B,KV,G))`` — the same contract as ``decode_attention_partials_ref``.
+    ``offset + t`` (``offset`` is one scalar per block, possibly traced —
+    e.g. ``axis_index * Sl`` inside shard_map); ``lengths`` is () or (B,)
+    int32. Returns fp32 ``(num (B,KV,G,D), den (B,KV,G), m (B,KV,G))`` —
+    the same contract as ``decode_attention_partials_ref``.
     """
+    b = q.shape[0]
     t = k_cache.shape[1]
+    lengths = _row_lengths(lengths, b)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if t < 64:
         return decode_attention_partials_ref(
-            q, k_cache, v_cache, length, offset=offset, window=window,
+            q, k_cache, v_cache, lengths, offset=offset, window=window,
             softcap=softcap)
     block_t = min(block_t, t)
     pad = (-t) % block_t
@@ -71,13 +85,14 @@ def decode_attention_partials(q, k_cache, v_cache, length, *,
         widths = ((0, 0), (0, pad), (0, 0), (0, 0))
         k_cache = jnp.pad(k_cache, widths)
         v_cache = jnp.pad(v_cache, widths)
-    # local column bounds: cap the causal bound at the unpadded block end
-    # (a fully-covered shard must not attend into the zero padding), and
-    # fold the sliding window into the lower bound.
-    local = jnp.asarray(length, jnp.int32) - jnp.asarray(offset, jnp.int32)
+    # per-row local column bounds: cap the causal bound at the unpadded
+    # block end (a fully-covered shard must not attend into the zero
+    # padding), and fold the sliding window into the lower bound.
+    local = lengths - jnp.asarray(offset, jnp.int32)  # (B,)
     upper = jnp.minimum(local, t - 1)
-    lower = local - window if window is not None else jnp.int32(-2 ** 30)
-    bounds = jnp.stack([upper, jnp.asarray(lower, jnp.int32)])
+    lower = (local - window if window is not None
+             else jnp.full_like(local, -2 ** 30))
+    bounds = jnp.stack([upper, lower])  # (2, B)
     return decode_attention_partials_kernel(
         q, k_cache, v_cache, bounds, softcap=softcap, block_t=block_t,
         interpret=interpret)

@@ -5,6 +5,11 @@ flash-decode kernel. ``decode_attention_partials_ref`` is the oracle for
 the partial-softmax variant that ``dist.collectives`` combines across
 sequence shards — it is also the CPU fallback that path runs in
 production when the Pallas kernel is unavailable.
+
+Both take RAGGED batches: ``lengths`` may be a scalar (every row at the
+same position — the pre-batched-decode behavior) or a ``(B,)`` int32
+vector giving each row its own current index, which is what the shared
+batched KV cache of ``serving.ContinuousBatcher`` feeds per decode round.
 """
 from __future__ import annotations
 
@@ -16,61 +21,70 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def decode_attention_ref(q, k_cache, v_cache, length, *,
+def _row_lengths(lengths, b: int):
+    """Normalize a scalar-or-(B,) ``lengths`` to a (B,) int32 vector."""
+    return jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (b,))
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths, *,
                          window: Optional[int] = None,
                          softcap: Optional[float] = None):
-    """q: (B,H,D); caches: (B,T,KV,D); length: int32 scalar (current index).
+    """q: (B,H,D); caches: (B,T,KV,D); lengths: () or (B,) int32.
 
-    Attends kv positions j <= length (and j > length - window if windowed).
-    Returns (B,H,D).
+    Row b attends kv positions j <= lengths[b] (and j > lengths[b] -
+    window if windowed). Returns (B,H,D).
     """
     b, h, d = q.shape
     t, kv = k_cache.shape[1], k_cache.shape[2]
     g = h // kv
+    lengths = _row_lengths(lengths, b)
     qg = q.reshape(b, kv, g, d).astype(jnp.float32)
     logits = jnp.einsum("bkgd,btkd->bkgt", qg,
                         k_cache.astype(jnp.float32)) / (d ** 0.5)
     if softcap is not None:
         logits = softcap * jnp.tanh(logits / softcap)
     pos = jnp.arange(t)
-    mask = pos <= length
+    mask = pos[None, :] <= lengths[:, None]  # (B, T)
     if window is not None:
-        mask &= pos > length - window
-    logits = jnp.where(mask[None, None, None, :], logits, NEG_INF)
+        mask &= pos[None, :] > (lengths[:, None] - window)
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     o = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
     return o.reshape(b, h, d).astype(q.dtype)
 
 
-def decode_attention_partials_ref(q, k_blk, v_blk, length, *,
+def decode_attention_partials_ref(q, k_blk, v_blk, lengths, *,
                                   offset=0,
                                   window: Optional[int] = None,
                                   softcap: Optional[float] = None):
     """Flash-decode partials over one KV block (pure jnp).
 
     q: (B,H,D); k_blk/v_blk: (B,Sl,KV,D); the global kv position of local
-    row t is ``offset + t``. Returns ``(num (B,KV,G,D), den (B,KV,G),
-    m (B,KV,G))`` — all fp32 — such that softmax attention over the union
-    of blocks is ``sum_i(num_i·e^{m_i-M}) / sum_i(den_i·e^{m_i-M})`` with
+    row t is ``offset + t`` (``offset`` is one scalar per block — the
+    sequence-shard offset). ``lengths`` is () or (B,) int32. Returns
+    ``(num (B,KV,G,D), den (B,KV,G), m (B,KV,G))`` — all fp32 — such that
+    softmax attention over the union of blocks is
+    ``sum_i(num_i·e^{m_i-M}) / sum_i(den_i·e^{m_i-M})`` with
     ``M = max_i(m_i)``. One block alone normalizes to ``num/den``.
     """
     b, h, d = q.shape
     kv = k_blk.shape[2]
     g = h // kv
+    lengths = _row_lengths(lengths, b)
     qg = q.reshape(b, kv, g, d).astype(jnp.float32)
     logits = jnp.einsum("bkgh,btkh->bkgt", qg,
                         k_blk.astype(jnp.float32)) / (d ** 0.5)
     if softcap is not None:
         logits = softcap * jnp.tanh(logits / softcap)
     pos = offset + jnp.arange(k_blk.shape[1])
-    mask = pos <= length
+    mask = pos[None, :] <= lengths[:, None]  # (B, Sl)
     if window is not None:
-        mask = mask & (pos > length - window)
-    logits = jnp.where(mask[None, None, None, :], logits, NEG_INF)
-    m = jnp.max(logits, axis=-1)  # (B,KV,G); NEG_INF on all-masked blocks
+        mask = mask & (pos[None, :] > (lengths[:, None] - window))
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1)  # (B,KV,G); NEG_INF on all-masked rows
     p = jnp.exp(logits - m[..., None])
-    # all-masked block: logits - m == 0 would give weight 1 — zero it out
-    p = jnp.where(mask[None, None, None, :], p, 0.0)
+    # all-masked row: logits - m == 0 would give weight 1 — zero it out
+    p = jnp.where(mask[:, None, None, :], p, 0.0)
     den = jnp.sum(p, axis=-1)
     num = jnp.einsum("bkgt,btkh->bkgh", p, v_blk.astype(jnp.float32))
     return num, den, m

@@ -167,13 +167,21 @@ def attend_full(q, k, v, *, mask_kind: str = "causal",
     return jnp.moveaxis(oc, 0, 1).reshape(b, s, h, hd)
 
 
-def attend_decode(q, k_cache, v_cache, length, *,
+def row_lengths(lengths, b: int):
+    """Normalize a scalar-or-(B,) ``lengths`` to a (B,) int32 vector."""
+    return jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (b,))
+
+
+def attend_decode(q, k_cache, v_cache, lengths, *,
                   window: Optional[int] = None, cap: Optional[float] = None,
                   impl: str = "xla"):
     """Single-token decode. q: (B,1,H,hd); caches: (B,Smax,KV,hd).
 
-    ``length`` (int32 scalar) = index of the current token; attends to
-    kv positions j <= length (the new token's k/v must already be written).
+    ``lengths`` (int32, scalar or (B,)) = per-row index of the current
+    token; row b attends kv positions j <= lengths[b] (the new token's
+    k/v must already be written). A (B,) vector makes the batch RAGGED —
+    the shared-batched-cache serving path decodes every slot at its own
+    position in one dispatch.
 
     Sharding: q is batch-sharded; under ``impl="seq_shard"`` the caches
     must carry ``NamedSharding`` with the sequence dim over "model" (the
@@ -183,25 +191,26 @@ def attend_decode(q, k_cache, v_cache, length, *,
     if impl == "seq_shard":
         from repro.dist import collectives
         return collectives.seq_sharded_decode(
-            q, k_cache, v_cache, length, window=window, cap=cap)
+            q, k_cache, v_cache, lengths, window=window, cap=cap)
     if impl == "pallas":
         from repro.kernels.decode_attention import ops as da_ops
         return da_ops.decode_attention(
-            q[:, 0], k_cache, v_cache, length, window=window, softcap=cap
+            q[:, 0], k_cache, v_cache, lengths, window=window, softcap=cap
         )[:, None]
     b, _, h, hd = q.shape
     kvh = k_cache.shape[2]
     g = h // kvh
+    lengths = row_lengths(lengths, b)
     qg = q.reshape(b, kvh, g, hd)
     scale = 1.0 / (hd ** 0.5)
     logits = jnp.einsum("bkgh,btkh->bkgt", qg.astype(jnp.float32),
                         k_cache.astype(jnp.float32)) * scale
     logits = softcap(logits, cap)
     t = jnp.arange(k_cache.shape[1])
-    mask = t <= length
+    mask = t[None, :] <= lengths[:, None]  # (B, Smax)
     if window is not None:
-        mask = mask & (t > length - window)
-    logits = jnp.where(mask[None, None, None, :], logits, NEG_INF)
+        mask = mask & (t[None, :] > (lengths[:, None] - window))
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)
     o = jnp.einsum("bkgt,btkh->bkgh", probs, v_cache.astype(jnp.float32))
     return o.reshape(b, 1, h, hd).astype(q.dtype)
@@ -236,19 +245,38 @@ def attn_forward(cfg: ModelConfig, p, x, *, mixer: str, positions,
     return (y, (k, v)) if return_kv else y
 
 
-def attn_decode_layer(cfg: ModelConfig, p, x, k_cache, v_cache, length, *,
+def write_kv_rows(cache, new, lengths):
+    """Write ``new`` (B,1,KV,hd) into ``cache`` (B,Smax,KV,hd) at each
+    row's own position ``lengths[b]`` (per-row dynamic_update_slice —
+    lowers to one scatter, so decode HBM traffic stays one token/row)."""
+    lengths = row_lengths(lengths, cache.shape[0])
+
+    def one_row(c, n, l):
+        return jax.lax.dynamic_update_slice_in_dim(
+            c, n.astype(c.dtype), l, axis=0)
+
+    return jax.vmap(one_row)(cache, new, lengths)
+
+
+def attn_decode_layer(cfg: ModelConfig, p, x, k_cache, v_cache, lengths, *,
                       mixer: str, impl: str = "xla"):
-    """Decode sublayer: project, write new kv at ``length``, attend.
+    """Decode sublayer: project, write new kv at each row's ``lengths[b]``,
+    attend.
 
     Returns (y, new_k_cache, new_v_cache) — the caches come back in the
-    layout they arrived in. Under ``impl="seq_shard"`` the write happens
-    inside the shard that owns global row ``length`` (fused with the
-    attention in one shard_map), so SPMD never gathers the cache around
-    the update; other impls use a plain dynamic_update_slice.
+    layout they arrived in. ``lengths`` is scalar or (B,): per-row
+    positions let one shared batched cache serve rows at different decode
+    depths (the ragged batch of ``serving.ContinuousBatcher``). Under
+    ``impl="seq_shard"`` each row's write happens inside the shard that
+    owns its global position (fused with the attention in one shard_map),
+    so SPMD never gathers the cache around the update; other impls use a
+    per-row dynamic_update_slice.
     """
+    b = x.shape[0]
+    lengths = row_lengths(lengths, b)
     q, k, v = project_qkv(cfg, p, x)  # q,k,v: (B,1,·,hd)
     if cfg.pos == "rope":
-        pos = jnp.asarray(length)[None, None]  # (1,1) broadcast over batch
+        pos = lengths[:, None]  # (B,1): each row rotates at its own index
         q = apply_rope(q, pos, cfg.rope_theta)
         k = apply_rope(k, pos, cfg.rope_theta)
     window = cfg.window if mixer == "attn_local" else None
@@ -257,14 +285,12 @@ def attn_decode_layer(cfg: ModelConfig, p, x, k_cache, v_cache, length, *,
         # the write must happen shard-locally or SPMD gathers the cache.
         from repro.dist import collectives
         o, k_cache, v_cache = collectives.seq_sharded_write_decode(
-            q, k, v, k_cache, v_cache, length, window=window,
+            q, k, v, k_cache, v_cache, lengths, window=window,
             cap=cfg.attn_softcap)
         return out_proj(p, o), k_cache, v_cache
-    k_cache = jax.lax.dynamic_update_slice_in_dim(
-        k_cache, k.astype(k_cache.dtype), length, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(
-        v_cache, v.astype(v_cache.dtype), length, axis=1)
-    o = attend_decode(q, k_cache, v_cache, length, window=window,
+    k_cache = write_kv_rows(k_cache, k, lengths)
+    v_cache = write_kv_rows(v_cache, v, lengths)
+    o = attend_decode(q, k_cache, v_cache, lengths, window=window,
                       cap=cfg.attn_softcap, impl=impl)
     return out_proj(p, o), k_cache, v_cache
 

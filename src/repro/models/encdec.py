@@ -144,11 +144,11 @@ class EncDecCache:
     self_v: Any
     cross_k: Any  # (L, B, S_enc, KV, hd)
     cross_v: Any
-    length: Any
+    lengths: Any  # (B,) int32 — per-row number of valid decoder tokens
 
     def tree_flatten(self):
         return ((self.self_k, self.self_v, self.cross_k, self.cross_v,
-                 self.length), None)
+                 self.lengths), None)
 
     @classmethod
     def tree_unflatten(cls, _, c):
@@ -160,7 +160,7 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int, enc_len: int):
     xshape = (cfg.n_layers, batch, enc_len, cfg.n_kv_heads, cfg.head_dim)
     f = lambda s: jax.ShapeDtypeStruct(s, jnp.bfloat16)
     return EncDecCache(f(kvshape), f(kvshape), f(xshape), f(xshape),
-                       jax.ShapeDtypeStruct((), jnp.int32))
+                       jax.ShapeDtypeStruct((batch,), jnp.int32))
 
 
 def prefill(cfg: ModelConfig, run: RunConfig, params, *, enc_embeds, tokens,
@@ -192,20 +192,20 @@ def prefill(cfg: ModelConfig, run: RunConfig, params, *, enc_embeds, tokens,
     x, (sk, sv, ck, cv) = jax.lax.scan(layer, x, params["dec_blocks"])
     x = apply_norm(cfg, params["final_norm"], x)
     logits = _dec_head(cfg, params, x[:, -1])
-    return logits, EncDecCache(sk, sv, ck, cv, jnp.asarray(s, jnp.int32))
+    return logits, EncDecCache(sk, sv, ck, cv, jnp.full((b,), s, jnp.int32))
 
 
 def decode_step(cfg: ModelConfig, run: RunConfig, params, cache: EncDecCache,
                 token):
-    length = cache.length
-    pos = jnp.full((1, 1), length, jnp.int32)
+    lengths = cache.lengths
+    pos = lengths[:, None]  # (B,1) — per-row decoder positions
     x = _dec_embed(cfg, params, token, pos)
 
     def layer(x, inp):
         p, sk, sv, ck, cv = inp
         h = apply_norm(cfg, p["norm1"], x)
         h, nk, nv = attn_lib.attn_decode_layer(
-            cfg, p["self_attn"], h, sk, sv, length, mixer="attn",
+            cfg, p["self_attn"], h, sk, sv, lengths, mixer="attn",
             impl=run.attn_impl)
         x = x + h
         h = apply_norm(cfg, p["norm_x"], x)
@@ -221,4 +221,4 @@ def decode_step(cfg: ModelConfig, run: RunConfig, params, cache: EncDecCache,
     x = apply_norm(cfg, params["final_norm"], x)
     logits = _dec_head(cfg, params, x[:, 0])
     return logits, EncDecCache(nsk, nsv, cache.cross_k, cache.cross_v,
-                               length + 1)
+                               lengths + 1)

@@ -82,6 +82,9 @@ class Model:
                                    max_len=max_len)
 
     def decode_step(self, run: RunConfig, params, cache, batch):
+        """One RAGGED decode step: row b embeds/writes/attends at its own
+        ``cache.lengths[b]`` and every row's length advances by 1 — one
+        dispatch serves continuous-batching slots at mixed depths."""
         cfg = self.cfg
         if cfg.encdec:
             return encdec.decode_step(cfg, run, params, cache,
@@ -91,6 +94,9 @@ class Model:
                                        embedding=batch.get("embedding"))
 
     # -- cache ----------------------------------------------------------
+    # Cache trees carry per-row ``lengths (batch,)`` (transformer.Cache /
+    # encdec.EncDecCache) — the leaf that makes one shared batched cache
+    # rag-decodable across serving slots.
     def cache_specs(self, batch: int, max_len: int,
                     enc_len: Optional[int] = None):
         if self.cfg.encdec:

@@ -219,13 +219,21 @@ def forward(cfg: ModelConfig, run: RunConfig, params, *, tokens=None,
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class Cache:
-    """Decode cache: per-pattern-position stacked layer caches + length."""
+    """Decode cache: per-pattern-position stacked layer caches + per-row
+    lengths.
+
+    ``lengths`` is (B,) — each batch row tracks its own number of valid
+    tokens, so one shared batched cache can hold requests at different
+    decode depths (ragged continuous batching). A free/evicted row is a
+    row whose length the serving layer reset to 0; the per-row masks make
+    it inert until the next admission overwrites the row.
+    """
 
     layers: tuple  # tuple over pattern positions; leaves lead with (G, ...)
-    length: Any    # int32 scalar — number of valid tokens
+    lengths: Any   # (B,) int32 — per-row number of valid tokens
 
     def tree_flatten(self):
-        return (self.layers, self.length), None
+        return (self.layers, self.lengths), None
 
     @classmethod
     def tree_unflatten(cls, _, children):
@@ -247,7 +255,7 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
             layers.append(jax.tree.map(
                 lambda s: jax.ShapeDtypeStruct((g,) + s.shape, s.dtype), one))
     return Cache(layers=tuple(layers),
-                 length=jax.ShapeDtypeStruct((), jnp.int32))
+                 lengths=jax.ShapeDtypeStruct((batch,), jnp.int32))
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int):
@@ -306,7 +314,7 @@ def prefill(cfg: ModelConfig, run: RunConfig, params, *, tokens=None,
     x_last = apply_norm(cfg, params["final_norm"], x[:, -1])
     logits = _lm_head(cfg, params, x_last)
     return logits, Cache(layers=layer_caches,
-                         length=jnp.asarray(s, jnp.int32))
+                         lengths=jnp.full((b,), s, jnp.int32))
 
 
 # ---------------------------------------------------------------------------
@@ -318,7 +326,11 @@ def decode_step(cfg: ModelConfig, run: RunConfig, params, cache: Cache,
                 token=None, embedding=None):
     """One decode step. token: (B,1) int32 (or embedding (B,1,D)).
 
-    Returns (logits (B,V), new Cache with length+1).
+    Returns (logits (B,V), new Cache with every row's length+1). The
+    batch is RAGGED: row b embeds/writes/attends at its own position
+    ``cache.lengths[b]``, so one dispatch serves continuous-batching
+    slots at different depths (a freed row just decodes inertly against
+    its masked cache — the serving layer discards its token).
 
     The cache lives in the scan CARRY (not xs/ys): while-loop carries
     alias in place, so each step's HBM traffic is one token's write +
@@ -326,8 +338,8 @@ def decode_step(cfg: ModelConfig, run: RunConfig, params, cache: Cache,
     a full layer slice per step (measured 8 GB/chip/step on command-r
     decode_32k, §Perf iteration 9).
     """
-    length = cache.length
-    pos = jnp.full((1, 1), length, jnp.int32)
+    lengths = cache.lengths
+    pos = lengths[:, None]  # (B,1) — per-row positions
     x = _embed_in(cfg, params, token, embedding, pos)
 
     def group(carry, gp):
@@ -340,7 +352,7 @@ def decode_step(cfg: ModelConfig, run: RunConfig, params, cache: Cache,
             h = apply_norm(cfg, p["norm1"], x)
             if spec.mixer.startswith("attn"):
                 h, nk, nv = attn_lib.attn_decode_layer(
-                    cfg, p["attn"], h, c["k"], c["v"], length,
+                    cfg, p["attn"], h, c["k"], c["v"], lengths,
                     mixer=spec.mixer, impl=run.attn_impl)
                 new_caches.append({"k": nk, "v": nv})
             else:
@@ -370,4 +382,4 @@ def decode_step(cfg: ModelConfig, run: RunConfig, params, cache: Cache,
         params["blocks"])
     x = apply_norm(cfg, params["final_norm"], x)
     logits = _lm_head(cfg, params, x[:, 0])
-    return logits, Cache(layers=new_layers, length=length + 1)
+    return logits, Cache(layers=new_layers, lengths=lengths + 1)

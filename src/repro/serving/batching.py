@@ -1,19 +1,29 @@
-"""Continuous batching: slot-based admission over a shared decode step.
+"""Continuous batching: slot-based admission over a SHARED batched cache.
 
-A fixed number of decode slots share the engine's compiled decode
-executables; new requests are admitted into freed slots between steps
+A fixed number of decode slots map onto the rows of ONE batched KV cache
 (the vLLM-style scheduling idea at the granularity this framework needs).
+The model's per-row ``cache.lengths`` make the batch ragged: every row
+decodes at its own position, so each scheduling round issues exactly
+**one** ``Engine.decode`` dispatch regardless of how many slots are
+active — decode throughput scales with the hardware, not with dispatch
+overhead (the same amortization lever the paper pulls by fanning a
+monolithic job out over parallel workers).
 
-Two layers:
+Three layers:
   * ``SlotScheduler`` — pure bookkeeping (which slot serves which
     request); no arrays, no device state.
-  * ``ContinuousBatcher`` — drives a (possibly mesh-aware) ``Engine``
-    through the prefill→decode handoff under that scheduling. Each slot
-    owns one request's decode cache, allocated by ``Engine.prefill`` in
-    the ``dist.sharding.cache_shardings`` layout; every decode step pins
-    cache in_sharding == out_sharding, so admission and eviction cycle
-    slots indefinitely without SPMD ever gathering a cache to one device
-    (asserted by tests/test_serving_sharded.py).
+  * ``ContinuousBatcher`` (``batched=True``, default) — one
+    (n_slots, max_len, …) cache in the engine's planned sharding;
+    admission = ``Engine.prefill_into`` writes row *b* (sharding
+    preserved, never gathered), eviction = ``Engine.free_row`` zeroes
+    row *b*'s length (free rows are masked by ``lengths``), and every
+    round is ONE batched decode dispatch. The cache-shape bucket is
+    stable, so ``engine.compile_count`` stays flat across admit/evict
+    churn (asserted by tests/test_serving_sharded.py).
+  * ``batched=False`` — the legacy per-slot path (one batch-1 cache and
+    one decode dispatch per active slot per round); kept as the
+    benchmark baseline that ``benchmarks/serving_bench.py`` compares
+    against.
 
 Used by the serve_cluster example and the serving benchmarks.
 """
@@ -22,6 +32,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.engine import Engine
@@ -46,7 +57,7 @@ class SlotScheduler:
          newly-admitted slot ids — the caller prefills exactly these.
       3. per decode round, ``step_done(slot, token)`` appends one token;
          a request reaching ``max_new_tokens`` completes and frees its
-         slot (the caller drops that slot's cache — eviction).
+         slot (the caller frees that slot's cache row — eviction).
       4. ``idle`` when the queue is empty and every slot is free.
 
     The scheduler never touches arrays: cache ownership lives with the
@@ -95,35 +106,109 @@ class SlotScheduler:
 class ContinuousBatcher:
     """Slot-level continuous batching over a mesh-aware ``Engine``.
 
-    Per slot the batcher holds the request's decode cache (in the
-    engine's planned sharding — seq-sharded over "model" under
-    ``Engine(seq_shard=True)``) and its last sampled token. Admission
-    prefills into a free slot; each round decodes every active slot once;
-    completion drops the slot's cache. Greedy sampling (the serving
-    benchmarks' configuration).
+    ``batched=True`` (default): slots are the rows of ONE shared decode
+    cache, allocated lazily at first admission with capacity ``max_len``
+    — or, when unset, the longest prompt then visible (slots + queue)
+    plus ``run.cache_pad``. A request whose prompt + max_new_tokens
+    exceeds the capacity raises immediately (no silent overflow); pass
+    ``max_len`` explicitly when later submissions may be longer.
+    Admission prefills into a free row, each round issues exactly one
+    ragged batched decode dispatch for ALL slots (free rows masked by
+    ``cache.lengths``), and completion zeroes the row's length. Greedy
+    sampling (the serving benchmarks' configuration).
+
+    ``batched=False``: legacy per-slot mode — each slot owns a batch-1
+    cache and every active slot costs one decode dispatch per round.
+
+    Counters: ``decode_dispatches`` = ``Engine.decode`` calls (what the
+    batched mode collapses to 1/round), ``decode_steps`` = slot-steps of
+    decode work (identical between modes for the same workload),
+    ``rounds`` = scheduling rounds driven.
     """
 
     engine: Engine
     params: Any
     n_slots: int = 4
+    max_len: Optional[int] = None
+    batched: bool = True
 
     def __post_init__(self):
         self.scheduler = SlotScheduler(self.n_slots)
-        self.caches: Dict[int, Any] = {}      # slot -> decode cache
-        self._last_tok: Dict[int, Any] = {}   # slot -> (1, 1) int32
+        self.cache: Any = None                # shared batched cache
+        self._tokens = np.zeros((self.n_slots, 1), np.int32)
+        self.caches: Dict[int, Any] = {}      # per-slot mode: slot -> cache
+        self._last_tok: Dict[int, Any] = {}   # per-slot mode: slot -> (1,1)
         self.decode_steps = 0
+        self.decode_dispatches = 0
+        self.rounds = 0
 
     def submit(self, req: Request):
         self.scheduler.submit(req)
 
     def step(self) -> List[int]:
-        """One scheduling round: admit (prefill) + decode all active slots.
+        """One scheduling round: admit (prefill) + decode.
 
-        Returns the slot ids that were newly admitted this round.
+        Batched mode decodes every slot in ONE dispatch; per-slot mode
+        decodes each active slot separately. Returns the slot ids that
+        were newly admitted this round.
         """
-        import jax.numpy as jnp
-
         admitted = self.scheduler.admit()
+        if self.batched:
+            self._step_batched(admitted)
+        else:
+            self._step_per_slot(admitted)
+        self.rounds += 1
+        return admitted
+
+    # -- batched: one shared cache, one dispatch per round --------------
+
+    def _step_batched(self, admitted: List[int]):
+        for slot in admitted:
+            req = self.scheduler.slots[slot]
+            if self.cache is None:
+                if self.max_len is None:
+                    # size for every request visible NOW (slots + queue),
+                    # with the same cache_pad headroom the per-slot path
+                    # gave each request; later, longer prompts raise
+                    # loudly below instead of silently overflowing
+                    known = [r for r in self.scheduler.slots
+                             if r is not None] + self.scheduler.queue
+                    self.max_len = max(
+                        len(r.prompt) for r in known
+                    ) + self.engine.run.cache_pad
+                self.cache = self.engine.new_cache(self.n_slots,
+                                                   self.max_len)
+            if len(req.prompt) + req.max_new_tokens > self.max_len:
+                raise ValueError(
+                    f"request {req.rid} needs {len(req.prompt)} prompt + "
+                    f"{req.max_new_tokens} new tokens but the shared "
+                    f"cache holds {self.max_len} — construct "
+                    f"ContinuousBatcher with a larger max_len")
+            logits, self.cache = self.engine.prefill_into(
+                self.params, self.cache, slot, req.prompt[None],
+                max_len=self.max_len)
+            tok = int(jnp.argmax(logits[0]))
+            self._tokens[slot, 0] = tok
+            self._commit_batched(slot, tok)
+        if not self.scheduler.active:
+            return
+        logits, self.cache = self.engine.decode(self.params, self.cache,
+                                                self._tokens)
+        self.decode_dispatches += 1
+        self.decode_steps += len(self.scheduler.active)
+        toks = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self._tokens[:, 0] = toks
+        for slot in list(self.scheduler.active):
+            self._commit_batched(slot, int(toks[slot]))
+
+    def _commit_batched(self, slot: int, tok: int):
+        self.scheduler.step_done(slot, tok)
+        if self.scheduler.slots[slot] is None:  # completed -> free the row
+            self.cache = self.engine.free_row(self.cache, slot)
+
+    # -- legacy per-slot: one cache + one dispatch per active slot ------
+
+    def _step_per_slot(self, admitted: List[int]):
         for slot in admitted:
             req = self.scheduler.slots[slot]
             logits, cache = self.engine.prefill(self.params,
@@ -131,18 +216,18 @@ class ContinuousBatcher:
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
             self.caches[slot] = cache
             self._last_tok[slot] = tok
-            self._commit(slot, tok)
+            self._commit_per_slot(slot, tok)
         for slot in list(self.scheduler.active):
             logits, cache = self.engine.decode(
                 self.params, self.caches[slot], self._last_tok[slot])
+            self.decode_dispatches += 1
             self.decode_steps += 1
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
             self.caches[slot] = cache
             self._last_tok[slot] = tok
-            self._commit(slot, tok)
-        return admitted
+            self._commit_per_slot(slot, tok)
 
-    def _commit(self, slot: int, tok):
+    def _commit_per_slot(self, slot: int, tok):
         self.scheduler.step_done(slot, int(tok[0, 0]))
         if self.scheduler.slots[slot] is None:  # completed -> evict
             self.caches.pop(slot, None)

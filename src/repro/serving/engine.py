@@ -9,6 +9,13 @@ prefill→decode handoff with explicit ``jax.jit`` in/out shardings so the
 cache NEVER gathers to one device between steps. Without a mesh every
 knob degrades to the single-device behavior (how CI and laptop tests run).
 
+The shared-batched-cache admission path (``new_cache`` → ``prefill_into``
+→ ``decode`` → ``free_row``) serves continuous batching: one
+(n_slots, max_len, …) cache whose per-row ``lengths`` make the decode
+batch ragged, so one decode dispatch serves every slot at its own depth.
+Row admission and eviction pin the same cache shardings as decode — the
+cache layout survives arbitrary admit/evict churn bit-for-bit.
+
 Compilation-cache / shape-bucket contract: every entry point routes
 through one executable cache keyed by (kind, input shape bucket).
 Repeated worker invocations with the same shapes hit warm executables —
@@ -229,13 +236,135 @@ class Engine:
         The executable is pinned with cache in_sharding == out_sharding
         == ``cache_sharding(cache)`` and the buffer is donated, so slot
         admission/eviction cycles around this call can never make SPMD
-        gather the cache to one device.
+        gather the cache to one device. The batch is RAGGED: each row
+        decodes at its own ``cache.lengths[b]``, so one dispatch serves
+        every continuous-batching slot at once.
         """
         with self._ctx():
             token = self.shard_inputs(jnp.asarray(token))
             fn = self._get_exec("decode", _shape_key(cache),
                                 lambda: self._jit_decode(cache))
             return fn(params, cache, token)
+
+    # ------------------------------------------------------------------
+    # Shared batched cache: allocation / row admission / row free
+    # ------------------------------------------------------------------
+
+    def new_cache(self, batch: int, max_len: int,
+                  enc_len: Optional[int] = None):
+        """Allocate an EMPTY shared batched decode cache (all lengths 0)
+        in the planned ``cache_shardings`` layout.
+
+        This is the backing store for batched continuous batching: one
+        (batch=n_slots, max_len, …) cache whose rows are admitted into by
+        :meth:`prefill_into` and freed by :meth:`free_row`. Under a mesh
+        the zeros are created by a jit pinned to the plan, so every
+        device allocates only its own shard — the full cache never
+        materializes on one device, not even transiently.
+        """
+        specs = self.model.cache_specs(batch, max_len, enc_len)
+        if self.mesh is None:
+            return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                specs)
+        with self._ctx():
+            fn = self._get_exec(
+                "new_cache", _shape_key(specs),
+                lambda: jax.jit(
+                    lambda: jax.tree.map(
+                        lambda s: jnp.zeros(s.shape, s.dtype), specs),
+                    out_shardings=self.cache_sharding(specs)))
+            return fn()
+
+    def _jit_prefill_into(self, cache, seq_len: int, max_len: int):
+        donate = (1,) if self.donate_cache else ()
+
+        def _prefill_into(params, cache, batch, row):
+            logits, small = self.model.prefill(self.run, params, batch,
+                                               max_len=max_len)
+            zero = jnp.zeros((), jnp.int32)
+
+            def write(big, sm):
+                # batch axis: 0 for the (B,) lengths leaf, 1 elsewhere
+                # (leaves lead with a groups/layers dim)
+                ax = 0 if big.ndim == 1 else 1
+                starts = tuple(row if i == ax else zero
+                               for i in range(big.ndim))
+                return jax.lax.dynamic_update_slice(
+                    big, sm.astype(big.dtype), starts)
+
+            return logits, jax.tree.map(write, cache, small)
+
+        if self.mesh is None:
+            return jax.jit(_prefill_into, donate_argnums=donate)
+        cache_sh = self.cache_sharding(cache)
+        logits_sh = self._batch_sharding((1, self.model.cfg.vocab_size))
+        tok_sh = shd.input_shardings(
+            jax.ShapeDtypeStruct((1, seq_len), jnp.int32), self.mesh)
+        row_sh = NamedSharding(self.mesh, jax.sharding.PartitionSpec())
+        return jax.jit(_prefill_into, donate_argnums=donate,
+                       in_shardings=(self.params_sharding, cache_sh,
+                                     {"tokens": tok_sh}, row_sh),
+                       out_shardings=(logits_sh, cache_sh))
+
+    def prefill_into(self, params, cache, row, tokens, *,
+                     max_len: Optional[int] = None
+                     ) -> Tuple[jax.Array, Any]:
+        """Admit one request into row ``row`` of a shared batched cache.
+
+        tokens: (1, S). Prefills against the shared cache's capacity
+        ``max_len`` (pass the value given to :meth:`new_cache`; inferred
+        from the cache's KV leaves when omitted) and writes the
+        resulting KV/state rows plus ``lengths[row] = S`` into the
+        shared cache — under the same pinned in/out ``cache_shardings``,
+        so admission never reshards (and never gathers) the cache.
+        ``row`` is a traced scalar: one executable per (cache bucket,
+        prompt shape), NOT per slot. Returns (last-token logits (1, V),
+        updated cache).
+        """
+        tokens = jnp.asarray(tokens)
+        _, s = tokens.shape
+        if max_len is None:
+            # fall back to the seq dim of any stacked KV leaf
+            max_len = next((l.shape[2] for l in jax.tree.leaves(cache)
+                            if getattr(l, "ndim", 0) >= 5),
+                           s + self.run.cache_pad)
+        if s > max_len:
+            raise ValueError(
+                f"prompt of {s} tokens exceeds the shared cache's "
+                f"capacity of {max_len} — allocate new_cache with a "
+                f"larger max_len")
+        with self._ctx():
+            batch = self.shard_inputs({"tokens": tokens})
+            fn = self._get_exec(
+                "prefill_into", (_shape_key(cache), _shape_key(batch)),
+                lambda: self._jit_prefill_into(cache, s, max_len))
+            return fn(params, cache, batch, jnp.asarray(row, jnp.int32))
+
+    def _jit_free_row(self, cache):
+        donate = (0,) if self.donate_cache else ()
+
+        def _free(cache, row):
+            lengths = jax.lax.dynamic_update_slice(
+                cache.lengths, jnp.zeros((1,), cache.lengths.dtype),
+                (row,))
+            return dataclasses.replace(cache, lengths=lengths)
+
+        if self.mesh is None:
+            return jax.jit(_free, donate_argnums=donate)
+        cache_sh = self.cache_sharding(cache)
+        row_sh = NamedSharding(self.mesh, jax.sharding.PartitionSpec())
+        return jax.jit(_free, donate_argnums=donate,
+                       in_shardings=(cache_sh, row_sh),
+                       out_shardings=cache_sh)
+
+    def free_row(self, cache, row):
+        """Evict row ``row``: reset its length to 0 (the per-row masks
+        make a zero-length row inert; its stale KV is overwritten by the
+        next :meth:`prefill_into`). Sharding-preserving and donated."""
+        with self._ctx():
+            fn = self._get_exec("free_row", _shape_key(cache),
+                                lambda: self._jit_free_row(cache))
+            return fn(cache, jnp.asarray(row, jnp.int32))
 
     # ------------------------------------------------------------------
     # Generation

