@@ -1,0 +1,126 @@
+"""Online-router benchmark: autoscaling policy × traffic-pattern grid.
+
+Each cell drives one policy against one synthetic arrival trace through
+``repro.router`` — REAL prefill/decode on this host, deterministic
+virtual clock (modeled round times, so the grid is reproducible across
+hosts). The ``derived`` column carries the serving headline figures:
+tok/s, p50/p99 TTFT, goodput, peak replicas, cost per 1k tokens.
+
+The claim the grid demonstrates (the paper's Fig-2 thesis restated for
+online traffic): under bursty arrivals the queue-depth autoscaler beats
+a fixed single replica on p99 TTFT severalfold (~7× at this recorded
+config) at equal-or-lower modeled cost. ``BENCH_4.json`` records the
+grid plus a ``claims`` block computing exactly that comparison.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+
+from repro import configs
+from repro.core import FaultInjector, LatencyModel
+from repro.models import RunConfig, build
+from repro.router import (QueueConfig, ReplicaConfig, ReplicaPool, Router,
+                          TRAFFIC, default_policies, make_requests)
+from repro.serving import Engine
+
+BENCH_RECORD = "BENCH_4.json"   # benchmarks/run.py --record writes this
+
+RATE_RPS = 32.0
+HORIZON_S = 8.0
+PROMPT_LEN = 16
+MAX_NEW = 8
+N_SLOTS = 4
+PER_TOKEN_S = 0.02
+COLD_START_S = 0.5
+SEED = 0
+
+LAST_RUN: dict = {}   # grid summaries + claims from the latest bench()
+
+
+def bench() -> list:
+    cfg = configs.smoke("qwen2-7b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(SEED))
+    engine = Engine(model, RunConfig(cache_pad=16))
+    rcfg = ReplicaConfig(n_slots=N_SLOTS,
+                         max_len=PROMPT_LEN + MAX_NEW + 8)
+    lat = LatencyModel(cold_start_s=COLD_START_S, per_item_s=PER_TOKEN_S)
+
+    rows, grid = [], []
+    for traffic_name in ("poisson", "bursty", "diurnal"):
+        arrivals = TRAFFIC[traffic_name](RATE_RPS, HORIZON_S, SEED)
+        for policy in default_policies(
+                slots_per_replica=N_SLOTS, max_replicas=8,
+                tokens_per_s_per_replica=1.0 / PER_TOKEN_S):
+            reqs = make_requests(arrivals, prompt_len=PROMPT_LEN,
+                                 max_new_tokens=MAX_NEW,
+                                 vocab=cfg.vocab_size, seed=SEED)
+            pool = ReplicaPool(engine, params, rcfg, lat=lat,
+                               injector=FaultInjector(seed=SEED))
+            router = Router(pool, policy, reqs, queue_cfg=QueueConfig(),
+                            traffic_name=traffic_name)
+            t0 = time.perf_counter()
+            report = router.run()
+            host_s = time.perf_counter() - t0
+            grid.append(report.summary())
+            rows.append((f"router/{traffic_name}_{policy.name}",
+                         host_s * 1e6 / max(report.tokens_out, 1),
+                         report.derived()))
+
+    LAST_RUN.clear()
+    LAST_RUN.update({"grid": grid, "claims": _claims(grid)})
+    return rows
+
+
+def _claims(grid: list) -> dict:
+    """The headline comparison: queue-depth vs fixed-1 under bursty."""
+    by = {(g["traffic"], g["policy"]): g for g in grid}
+    fixed = by.get(("bursty", "fixed-1"))
+    auto = by.get(("bursty", "queue-depth"))
+    if not fixed or not auto:
+        return {}
+    return {
+        "bursty_p99_ttft_fixed1_s": fixed["ttft_p99_s"],
+        "bursty_p99_ttft_queue_depth_s": auto["ttft_p99_s"],
+        "p99_ttft_speedup": round(
+            fixed["ttft_p99_s"] / max(auto["ttft_p99_s"], 1e-9), 2),
+        "cost_ratio_queue_depth_vs_fixed1": round(
+            auto["cost_usd"] / max(fixed["cost_usd"], 1e-12), 4),
+        "queue_depth_wins_p99_at_leq_cost": bool(
+            auto["ttft_p99_s"] < fixed["ttft_p99_s"]
+            and auto["cost_usd"] <= fixed["cost_usd"] * 1.0001),
+    }
+
+
+def record(rows: list) -> dict:
+    """JSON payload for benchmarks/run.py --record / __main__."""
+    return {
+        "benchmark": "router_bench",
+        "device_count": jax.device_count(),
+        "backend": jax.default_backend(),
+        "config": {"rate_rps": RATE_RPS, "horizon_s": HORIZON_S,
+                   "prompt_len": PROMPT_LEN, "max_new_tokens": MAX_NEW,
+                   "n_slots": N_SLOTS, "per_token_s": PER_TOKEN_S,
+                   "cold_start_s": COLD_START_S, "seed": SEED},
+        "rows": [{"name": n, "us_per_call": round(us, 2), "derived": d}
+                 for n, us, d in rows],
+        "grid": LAST_RUN.get("grid", []),
+        "claims": LAST_RUN.get("claims", {}),
+    }
+
+
+if __name__ == "__main__":
+    import sys
+    out_rows = bench()
+    for name, us, derived in out_rows:
+        print(f"{name},{us:.2f},{derived}")
+    claims = LAST_RUN.get("claims", {})
+    if claims:
+        print(f"# claims: {json.dumps(claims)}", file=sys.stderr)
+    if len(sys.argv) > 1:   # record the run, e.g. BENCH_4.json
+        with open(sys.argv[1], "w") as f:
+            json.dump(record(out_rows), f, indent=2)
+            f.write("\n")

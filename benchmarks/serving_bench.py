@@ -25,6 +25,8 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import RunConfig, build
 from repro.serving import ContinuousBatcher, Engine, Request, SlotScheduler
 
+BENCH_RECORD = "BENCH_3.json"   # benchmarks/run.py --record writes this
+
 
 def _engine_rows(engine: Engine, params, tag: str, b=8, s=32, new=32):
     out = []
@@ -114,6 +116,15 @@ def bench() -> list:
     return out
 
 
+def record(rows: list) -> dict:
+    """JSON payload for benchmarks/run.py --record / __main__."""
+    return {"benchmark": "serving_bench",
+            "device_count": jax.device_count(),
+            "backend": jax.default_backend(),
+            "rows": [{"name": n, "us_per_call": round(us, 2),
+                      "derived": d} for n, us, d in rows]}
+
+
 if __name__ == "__main__":
     import sys
     rows = bench()
@@ -121,10 +132,5 @@ if __name__ == "__main__":
         print(f"{name},{us:.2f},{derived}")
     if len(sys.argv) > 1:  # record the run, e.g. BENCH_3.json
         with open(sys.argv[1], "w") as f:
-            json.dump({"benchmark": "serving_bench",
-                       "device_count": jax.device_count(),
-                       "backend": jax.default_backend(),
-                       "rows": [{"name": n, "us_per_call": round(us, 2),
-                                 "derived": d} for n, us, d in rows]},
-                      f, indent=2)
+            json.dump(record(rows), f, indent=2)
             f.write("\n")

@@ -1,13 +1,22 @@
 """Serving driver: the paper's parallel batch inference, end to end.
 
-Stands up the EFS-analogue store, publishes a model, decomposes a batch
-job, and runs it monolithically AND in parallel through the orchestrator
-with REAL inference on this host — then prints the comparison the paper's
-Fig. 2 makes, plus fault-tolerance statistics if faults are injected.
+OFFLINE mode (default) stands up the EFS-analogue store, publishes a
+model, decomposes a batch job, and runs it monolithically AND in
+parallel through the orchestrator with REAL inference on this host —
+then prints the comparison the paper's Fig. 2 makes, plus
+fault-tolerance statistics if faults are injected.
+
+ONLINE mode (``--router``) puts LIVE traffic on the batched serving
+stack instead: a synthetic arrival process (``--traffic
+poisson|bursty|diurnal``) hits the ``repro.router`` arrival queue, and
+each autoscaling policy in turn drives a replica pool of
+``ContinuousBatcher`` instances — cold starts, optional crashes, and
+per-policy TTFT/TPOT/goodput/cost on one line each.
 
 Usage:
   python -m repro.launch.serve --n-items 256 --batch-size 32 \
       --concurrency 8 --crash-prob 0.1
+  python -m repro.launch.serve --router --traffic bursty --rate 24
 
 Mesh mode: ``--mesh DxM`` (e.g. ``--mesh 2x4`` over 8 host devices, or
 on TPU the real chips) lays a ("data", "model") mesh under every worker's
@@ -32,6 +41,62 @@ from repro.models import RunConfig, build
 from repro.serving import Engine
 
 
+def run_router(args, mesh):
+    """Online mode: live traffic, per-policy TTFT/TPOT/cost rows."""
+    from repro.router import (QueueConfig, ReplicaConfig, ReplicaPool,
+                              Router, TRAFFIC, default_policies,
+                              make_requests)
+
+    cfg = configs.smoke(args.router_arch)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    engine = Engine(model, RunConfig(cache_pad=16), mesh=mesh,
+                    seq_shard=args.seq_shard)
+    params = engine.shard_params(params)
+    store = ArtifactStore()
+    store.put_tree("models/lm", params)
+
+    arrivals = TRAFFIC[args.traffic](args.rate, args.horizon, args.seed)
+    lat = LatencyModel(cold_start_s=args.cold_start,
+                       per_item_s=None if args.measured_time
+                       else args.per_token_s)
+    rcfg = ReplicaConfig(
+        n_slots=args.n_slots,
+        max_len=args.prompt_len + args.max_new_tokens + 8)
+    # one replica retires ~1/per_token_s tokens of work per second (the
+    # work-conserving time model — see router/README.md)
+    policies = default_policies(slots_per_replica=args.n_slots,
+                                max_replicas=args.max_replicas,
+                                tokens_per_s_per_replica=1.0
+                                / max(args.per_token_s, 1e-6),
+                                budget_usd=args.budget_usd)
+    print(f"== router: {len(arrivals)} requests over {args.horizon:.0f}s "
+          f"({args.traffic} at {args.rate:.0f} rps), "
+          f"prompt {args.prompt_len} + {args.max_new_tokens} new tokens, "
+          f"{args.n_slots} slots/replica ==")
+    out = {}
+    for policy in policies:
+        traffic = make_requests(
+            arrivals, prompt_len=args.prompt_len,
+            max_new_tokens=args.max_new_tokens, vocab=cfg.vocab_size,
+            seed=args.seed, deadline_s=args.deadline)
+        pool = ReplicaPool(
+            engine, params, rcfg, lat=lat,
+            injector=FaultInjector(seed=args.seed,
+                                   crash_prob=args.crash_prob,
+                                   straggler_prob=args.straggler_prob),
+            store=store, params_ref="models/lm")
+        router = Router(pool, policy, traffic,
+                        queue_cfg=QueueConfig(max_depth=args.queue_cap,
+                                              default_deadline_s=
+                                              args.deadline),
+                        traffic_name=args.traffic)
+        report = router.run()
+        print(report.format_line())
+        out[policy.name] = report.summary()
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="distilbert-imdb")
@@ -47,6 +112,37 @@ def main(argv=None):
                          "requires that many local devices")
     ap.add_argument("--seq-shard", action="store_true",
                     help="sequence-shard decode KV caches over 'model'")
+    # -- online mode (repro.router) -------------------------------------
+    ap.add_argument("--router", action="store_true",
+                    help="online mode: live traffic through the "
+                         "autoscaling router (ignores the offline "
+                         "batch-job flags)")
+    ap.add_argument("--traffic", default="poisson",
+                    choices=("poisson", "bursty", "diurnal"))
+    ap.add_argument("--rate", type=float, default=12.0,
+                    help="arrival rate (requests/s; burst/peak rate for "
+                         "bursty/diurnal)")
+    ap.add_argument("--horizon", type=float, default=8.0,
+                    help="traffic horizon in virtual seconds")
+    ap.add_argument("--router-arch", default="qwen2-7b",
+                    help="decoder LM for online generation (smoke-sized)")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--n-slots", type=int, default=4)
+    ap.add_argument("--max-replicas", type=int, default=8)
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request SLO seconds (goodput denominator)")
+    ap.add_argument("--queue-cap", type=int, default=None,
+                    help="admission control: reject past this depth")
+    ap.add_argument("--cold-start", type=float, default=0.5,
+                    help="replica cold-start seconds on the virtual clock")
+    ap.add_argument("--per-token-s", type=float, default=0.02,
+                    help="modeled seconds per decode token per slot")
+    ap.add_argument("--measured-time", action="store_true",
+                    help="advance the virtual clock by measured host "
+                         "wall time instead of the token model")
+    ap.add_argument("--budget-usd", type=float, default=1.0,
+                    help="cost-cap policy budget")
     args = ap.parse_args(argv)
 
     mesh = None
@@ -54,6 +150,8 @@ def main(argv=None):
         shape = tuple(int(x) for x in args.mesh.lower().split("x"))
         from repro.launch.mesh import make_host_mesh
         mesh = make_host_mesh(shape, ("data", "model"))
+    if args.router:
+        return run_router(args, mesh)
     cfg = configs.smoke(args.arch)
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))

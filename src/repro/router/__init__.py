@@ -1,0 +1,22 @@
+"""Online request router: serverless elasticity over the serving stack.
+
+The layer that puts LIVE traffic on the batched engines: an arrival
+queue with admission control, a replica pool (each replica = one
+``ContinuousBatcher(batched=True)`` over the shared ``Engine``) with
+cold starts and fault-injected crashes, pluggable autoscaling policies,
+and TTFT/TPOT/goodput/cost metrics. See router/README.md.
+"""
+from repro.router.metrics import (RouterReport, billing,  # noqa: F401
+                                  percentile, request_latencies)
+from repro.router.policy import (AutoscalePolicy, CostCapPolicy,  # noqa: F401
+                                 FixedReplicas, PoolSnapshot,
+                                 QueueDepthPolicy, ThroughputPolicy,
+                                 aws_replica_price_s, default_policies,
+                                 tpu_replica_price_s)
+from repro.router.pool import (Replica, ReplicaConfig,  # noqa: F401
+                               ReplicaPool)
+from repro.router.queue import ArrivalQueue, QueueConfig  # noqa: F401
+from repro.router.router import Router, RouterConfig  # noqa: F401
+from repro.router.traffic import (TRAFFIC, bursty_arrivals,  # noqa: F401
+                                  diurnal_arrivals, make_requests,
+                                  poisson_arrivals)

@@ -1,0 +1,229 @@
+"""Replica pool: serverless elasticity over the batched serving stack.
+
+Each replica is one "serverless function instance" of the serving
+layer: a ``ContinuousBatcher(batched=True)`` over the SHARED ``Engine``
+— its own (n_slots, max_len, …) ragged KV cache, one decode dispatch
+per round. Sharing the Engine across replicas models the platform's
+warm container pool: every replica has the same cache/prompt shape
+buckets, so spawning replica N hits the executables replica 1 compiled
+and ``engine.compile_count`` stays flat per replica (asserted by
+tests/test_router.py).
+
+Elasticity semantics (what the policies drive through ``scale_to``):
+
+  * SCALE UP pays a cold start on the virtual clock —
+    ``LatencyModel.cold_start_s`` plus the params fetch from the
+    ``ArtifactStore`` (EFS analogue) when one is attached, exactly the
+    cold-load ``core/worker.py`` charges. A starting replica serves
+    nothing until ``ready_t``.
+  * SCALE DOWN drains: the replica stops admitting and retires once its
+    last slot finishes. Scaling up again reinstates draining replicas
+    first (free) before paying for a new cold start.
+  * CRASH (``core.faults.FaultInjector``, keyed by (replica_id, round)
+    so runs are reproducible) kills the replica mid-round: the round's
+    work is lost and its in-flight requests are handed back to the
+    caller for re-queueing — the paper's retry semantics at row
+    granularity.
+
+Billing is serverless (Lambda on-demand semantics): only BUSY
+replica-seconds are billed — idle warm time and cold-start init cost
+latency, not dollars. ``provisioned_seconds`` is also tracked for
+anyone who wants reserved-capacity accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, List, Optional
+
+from repro.core.faults import NO_FAULTS, FaultInjector
+from repro.core.store import ArtifactStore
+from repro.core.worker import LatencyModel
+from repro.serving.batching import ContinuousBatcher, Request
+from repro.serving.engine import Engine
+
+STARTING, READY, DRAINING, DEAD, RETIRED = (
+    "starting", "ready", "draining", "dead", "retired")
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaConfig:
+    """Shape of one replica. ``max_len`` is fixed up front so every
+    replica allocates the identical cache bucket (flat compile_count);
+    it must cover ``prompt_len + max_new_tokens`` for every request."""
+
+    n_slots: int = 4
+    max_len: int = 64
+    ram_mb: float = 848.0        # the paper's Lambda sizing
+    chips_per_replica: int = 1   # TPU-analogue chip-seconds accounting
+
+
+class Replica:
+    """One serving instance: state machine + its batcher + accounting."""
+
+    def __init__(self, replica_id: int, batcher: ContinuousBatcher,
+                 spawn_t: float, ready_t: float):
+        self.replica_id = replica_id
+        self.batcher = batcher
+        self.state = STARTING
+        self.spawn_t = spawn_t
+        self.ready_t = ready_t
+        self.retire_t: Optional[float] = None
+        self.rounds = 0
+        self.busy_s = 0.0            # billed virtual seconds
+        self.busy_slot_rounds = 0
+        self.slot_rounds = 0
+        self.tokens_out = 0
+        self._n_done_drained = 0
+
+    @property
+    def sched(self):
+        return self.batcher.scheduler
+
+    @property
+    def n_inflight(self) -> int:
+        return len(self.sched.active) + len(self.sched.queue)
+
+    @property
+    def free_slots(self) -> int:
+        """Slots this replica can accept NOW (draining accepts none)."""
+        if self.state != READY:
+            return 0
+        return self.batcher.n_slots - self.n_inflight
+
+    def poll_ready(self, now: float):
+        if self.state == STARTING and now + 1e-12 >= self.ready_t:
+            self.state = READY
+
+    def inflight(self) -> List[Request]:
+        return ([r for r in self.sched.slots if r is not None]
+                + list(self.sched.queue))
+
+    def step(self) -> float:
+        """One scheduling round (admissions + ONE decode dispatch);
+        returns measured host wall seconds."""
+        self.rounds += 1
+        t0 = time.perf_counter()
+        self.batcher.step()
+        return time.perf_counter() - t0
+
+    def drain_completed(self) -> List[Request]:
+        """Requests that finished since the last call."""
+        done = self.sched.completed[self._n_done_drained:]
+        self._n_done_drained = len(self.sched.completed)
+        return done
+
+
+class ReplicaPool:
+    """Spawns/retires/crashes replicas against one shared Engine."""
+
+    def __init__(self, engine: Engine, params: Any,
+                 cfg: ReplicaConfig = ReplicaConfig(),
+                 lat: LatencyModel = LatencyModel(),
+                 injector: FaultInjector = NO_FAULTS,
+                 store: Optional[ArtifactStore] = None,
+                 params_ref: str = ""):
+        self.engine = engine
+        self.params = params
+        self.cfg = cfg
+        self.lat = lat
+        self.injector = injector
+        self.store = store
+        self.params_ref = params_ref
+        self.replicas: List[Replica] = []   # every replica ever (billing)
+        self.n_spawns = 0
+        self.n_crashes = 0
+
+    # -- lifecycle ------------------------------------------------------
+
+    def cold_start_s(self) -> float:
+        """Scale-up latency: runtime init + model fetch (EFS analogue)."""
+        s = self.lat.cold_start_s
+        if (self.store is not None and self.params_ref
+                and self.store.exists(self.params_ref)):
+            s += self.store.read_time_s(self.store.size(self.params_ref))
+        return s
+
+    def spawn(self, now: float) -> Replica:
+        batcher = ContinuousBatcher(self.engine, self.params,
+                                    n_slots=self.cfg.n_slots,
+                                    max_len=self.cfg.max_len, batched=True)
+        r = Replica(len(self.replicas), batcher, spawn_t=now,
+                    ready_t=now + self.cold_start_s())
+        self.replicas.append(r)
+        self.n_spawns += 1
+        return r
+
+    def poll_ready(self, now: float):
+        for r in self.replicas:
+            r.poll_ready(now)
+
+    def live(self) -> List[Replica]:
+        return [r for r in self.replicas
+                if r.state in (STARTING, READY, DRAINING)]
+
+    def ready(self) -> List[Replica]:
+        return [r for r in self.replicas if r.state == READY]
+
+    def scale_to(self, target: int, now: float):
+        """Move the pool toward ``target`` serving replicas
+        (ready + starting; draining don't count — they're on the way
+        out unless reinstated here)."""
+        serving = [r for r in self.replicas if r.state in (STARTING, READY)]
+        n = len(serving)
+        if n < target:
+            # reinstate draining replicas first — no cold start to pay
+            for r in self.replicas:
+                if n >= target:
+                    break
+                if r.state == DRAINING:
+                    r.state = READY
+                    n += 1
+            while n < target:
+                self.spawn(now)
+                n += 1
+        elif n > target:
+            # cancel still-cold replicas first, then drain idle-most
+            for r in sorted(serving, key=lambda r: (r.state != STARTING,
+                                                    r.n_inflight)):
+                if n <= target:
+                    break
+                if r.state == STARTING:
+                    r.state = RETIRED
+                    r.retire_t = now
+                else:
+                    r.state = DRAINING
+                n -= 1
+        self.retire_drained(now)
+
+    def retire_drained(self, now: float):
+        for r in self.replicas:
+            if r.state == DRAINING and r.n_inflight == 0:
+                r.state = RETIRED
+                r.retire_t = now
+
+    def retire_all(self, now: float):
+        for r in self.live():
+            r.state = RETIRED
+            r.retire_t = now
+
+    def crash(self, r: Replica, now: float) -> List[Request]:
+        """Kill ``r``; returns its in-flight requests (the caller
+        re-queues them — tokens already lost via reset_for_retry)."""
+        reqs = r.inflight()
+        r.state = DEAD
+        r.retire_t = now
+        self.n_crashes += 1
+        return reqs
+
+    # -- accounting -----------------------------------------------------
+
+    def busy_seconds(self) -> float:
+        return sum(r.busy_s for r in self.replicas)
+
+    def provisioned_seconds(self, now: float) -> float:
+        return sum((r.retire_t if r.retire_t is not None else now)
+                   - r.spawn_t for r in self.replicas)
+
+    def tokens_out(self) -> int:
+        return sum(r.tokens_out for r in self.replicas)

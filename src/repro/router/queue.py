@@ -1,0 +1,94 @@
+"""Arrival queue: admission control + per-request deadlines.
+
+The front door of the online router. Requests arrive on the virtual
+clock (``repro.router.traffic`` generates the arrival process), get
+stamped with ``arrival_t``, and wait FIFO until a replica has a free
+decode slot. Two admission-control levers:
+
+  * ``max_depth`` — bounded queue: submissions past the cap are REJECTED
+    immediately (the client sees a 429, not an unbounded wait).
+  * deadlines — a request whose SLO has already expired by the time it
+    would be dispatched is dropped as EXPIRED instead of burning replica
+    time on an answer nobody is waiting for.
+
+Crash re-queue (``requeue``) puts a dead replica's in-flight requests
+back at the FRONT of the queue — oldest work first, mirroring the
+orchestrator's retry-before-new-work ordering — after
+``Request.reset_for_retry()`` discards the lost tokens (the paper's
+retry-from-scratch semantics).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Iterable, List, Optional
+
+from repro.serving.batching import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class QueueConfig:
+    max_depth: Optional[int] = None          # None -> unbounded
+    default_deadline_s: Optional[float] = None  # applied when req has none
+    drop_expired: bool = True                # expire on pop vs serve late
+
+
+class ArrivalQueue:
+    """FIFO arrival queue with admission control (see module docstring).
+
+    All mutation happens through ``submit`` / ``pop`` / ``requeue`` so
+    the rejected/expired/requeued accounting the metrics layer reads is
+    always consistent with what replicas actually served.
+    """
+
+    def __init__(self, cfg: QueueConfig = QueueConfig()):
+        self.cfg = cfg
+        self._q: Deque[Request] = deque()
+        self.rejected: List[Request] = []
+        self.expired: List[Request] = []
+        self.n_submitted = 0
+        self.n_requeued = 0
+
+    def submit(self, req: Request, now: float) -> bool:
+        """Admit ``req`` at time ``now``; False = rejected (queue full)."""
+        self.n_submitted += 1
+        if req.arrival_t is None:
+            req.arrival_t = now
+        if req.deadline_s is None:
+            req.deadline_s = self.cfg.default_deadline_s
+        if (self.cfg.max_depth is not None
+                and len(self._q) >= self.cfg.max_depth):
+            self.rejected.append(req)
+            return False
+        self._q.append(req)
+        return True
+
+    def requeue(self, reqs: Iterable[Request]) -> int:
+        """Crash re-queue at the FRONT (in original order); returns count."""
+        reqs = list(reqs)
+        for req in reversed(reqs):
+            req.reset_for_retry()
+            self._q.appendleft(req)
+        self.n_requeued += len(reqs)
+        return len(reqs)
+
+    def pop(self, now: float) -> Optional[Request]:
+        """Next dispatchable request, dropping expired ones on the way."""
+        while self._q:
+            req = self._q.popleft()
+            if (self.cfg.drop_expired and req.deadline_s is not None
+                    and req.arrival_t is not None
+                    and now - req.arrival_t > req.deadline_s):
+                self.expired.append(req)
+                continue
+            return req
+        return None
+
+    @property
+    def depth(self) -> int:
+        return len(self._q)
+
+    def oldest_wait_s(self, now: float) -> float:
+        if not self._q or self._q[0].arrival_t is None:
+            return 0.0
+        return now - self._q[0].arrival_t

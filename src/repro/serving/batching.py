@@ -25,7 +25,9 @@ Three layers:
     benchmark baseline that ``benchmarks/serving_bench.py`` compares
     against.
 
-Used by the serve_cluster example and the serving benchmarks.
+Used by the serve_cluster example, the serving benchmarks, and the
+online router (``repro.router`` — each pool replica wraps one
+``ContinuousBatcher(batched=True)`` over the shared engine).
 """
 from __future__ import annotations
 
@@ -40,11 +42,29 @@ from repro.serving.engine import Engine
 
 @dataclasses.dataclass
 class Request:
+    """One generation request. The core fields drive the batcher; the
+    timestamp/SLO fields are stamped by the online router
+    (``repro.router``) on its virtual clock and stay ``None`` for the
+    offline benchmark workloads."""
+
     rid: int
     prompt: np.ndarray      # (S,) int32
     max_new_tokens: int
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    arrival_t: Optional[float] = None       # entered the arrival queue
+    deadline_s: Optional[float] = None      # SLO: finish within this of arrival
+    first_token_t: Optional[float] = None   # first streamed token (TTFT)
+    finish_t: Optional[float] = None        # last token committed
+    n_retries: int = 0
+
+    def reset_for_retry(self):
+        """Crash re-queue (the paper's retry semantics): in-flight work is
+        lost and the request re-runs from scratch. ``first_token_t`` is
+        kept — the client already saw that token on the stream."""
+        self.generated = []
+        self.done = False
+        self.n_retries += 1
 
 
 @dataclasses.dataclass

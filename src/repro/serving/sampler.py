@@ -8,8 +8,22 @@ import jax.numpy as jnp
 
 
 def sample(logits, key, *, temperature: float = 0.0,
-           top_k: Optional[int] = None):
-    """logits: (B, V) fp32 -> (B,) int32."""
+           top_k: Optional[int] = None, top_p: Optional[float] = None):
+    """logits: (B, V) fp32 -> (B,) int32.
+
+    ``temperature <= 0`` is greedy argmax (key unused). Otherwise the
+    logits are divided by ``temperature`` and filtered before the
+    categorical draw:
+
+    * ``top_k`` keeps the k highest logits per row;
+    * ``top_p`` (nucleus) keeps the smallest set of tokens whose
+      probability mass reaches ``top_p``. ``top_p >= 1.0`` is a no-op;
+      ties at the nucleus boundary are kept (never dropped), and the
+      highest-probability token always survives — ``top_p <= 0``
+      degenerates to sampling the per-row argmax.
+
+    Both filters compose — k first, then p — the usual serving order.
+    """
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / temperature
@@ -17,4 +31,16 @@ def sample(logits, key, *, temperature: float = 0.0,
         vals, _ = jax.lax.top_k(logits, top_k)
         kth = vals[:, -1:]
         logits = jnp.where(logits < kth, -1e30, logits)
+    if top_p is not None and top_p < 1.0:
+        probs = jax.nn.softmax(logits, axis=-1)
+        sorted_probs = -jnp.sort(-probs, axis=-1)           # descending
+        cum = jnp.cumsum(sorted_probs, axis=-1)
+        # a sorted slot is in the nucleus if the mass BEFORE it is < p;
+        # the top slot is forced in so the nucleus is never empty (at
+        # top_p <= 0 the strict < would otherwise mask every token)
+        in_nucleus = (cum - sorted_probs) < top_p
+        in_nucleus = in_nucleus.at[:, 0].set(True)
+        cutoff = jnp.min(jnp.where(in_nucleus, sorted_probs, jnp.inf),
+                         axis=-1, keepdims=True)
+        logits = jnp.where(probs < cutoff, -1e30, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,6 +1,6 @@
 """Hypothesis property tests on the system's invariants:
 decomposition coverage, cost-model monotonicity/accounting, capacity,
-merge exactness, checkpoint round-trips.
+merge exactness, checkpoint round-trips, router arrival/queue laws.
 """
 import numpy as np
 import pytest
@@ -19,6 +19,9 @@ from repro.core.job import TaskRecord, Chunk, InvokeOutcome
 from repro.data.pipeline import DatasetRef, chunk_ranges
 from repro.models.common import MoEConfig
 from repro.models.moe import capacity
+from repro.router import (ArrivalQueue, QueueConfig, bursty_arrivals,
+                          diurnal_arrivals, poisson_arrivals)
+from repro.serving.batching import Request
 
 
 # ---------------------------------------------------------------------------
@@ -142,3 +145,58 @@ def test_store_idempotent_first_writer_wins(keys):
         assert store.put("k/" + k, b"first", overwrite=False)
         assert not store.put("k/" + k, b"second", overwrite=False)
         assert store.get("k/" + k) == b"first"
+
+
+# ---------------------------------------------------------------------------
+# Router: traffic generators / arrival queue
+# ---------------------------------------------------------------------------
+
+
+@given(rate=st.floats(0.5, 50.0), horizon=st.floats(0.5, 8.0),
+       seed=st.integers(0, 2**16))
+@settings(deadline=None, max_examples=25)
+def test_arrivals_sorted_bounded_deterministic(rate, horizon, seed):
+    for gen in (poisson_arrivals, bursty_arrivals, diurnal_arrivals):
+        a = gen(rate, horizon, seed)
+        assert np.array_equal(a, gen(rate, horizon, seed))
+        assert np.all(np.diff(a) >= 0)
+        assert a.size == 0 or (a[0] >= 0.0 and a[-1] < horizon)
+
+
+def _reqs(n):
+    return [Request(i, np.ones(2, np.int32), max_new_tokens=1)
+            for i in range(n)]
+
+
+@given(n=st.integers(1, 40), cap=st.integers(1, 40))
+@settings(deadline=None, max_examples=30)
+def test_queue_fifo_and_admission_cap(n, cap):
+    q = ArrivalQueue(QueueConfig(max_depth=cap))
+    admitted = [r for r in _reqs(n) if q.submit(r, 0.0)]
+    assert len(admitted) == min(n, cap)
+    assert q.n_submitted == n and len(q.rejected) == n - len(admitted)
+    popped = []
+    while (r := q.pop(0.0)) is not None:
+        popped.append(r.rid)
+    assert popped == [r.rid for r in admitted]  # FIFO, no loss
+
+
+@given(n=st.integers(2, 20), k=st.integers(1, 10))
+@settings(deadline=None, max_examples=30)
+def test_queue_requeue_front_preserves_order(n, k):
+    """Crash re-queue puts the k lost requests ahead of the waiting
+    queue, in their original order, with work reset."""
+    q = ArrivalQueue()
+    for r in _reqs(n):
+        q.submit(r, 0.0)
+    k = min(k, n)
+    lost = [q.pop(0.0) for _ in range(k)]
+    for r in lost:
+        r.generated = [1]
+    q.requeue(lost)
+    order = []
+    while (r := q.pop(0.0)) is not None:
+        order.append(r.rid)
+        assert r.generated == [] or r.rid >= k
+    assert order == list(range(n))
+    assert q.n_requeued == k

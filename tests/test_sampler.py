@@ -1,0 +1,128 @@
+"""Direct coverage for serving/sampler.py: greedy / temperature /
+top-k / top-p edge cases (top_p=1.0 no-op, single-token mass, fixed-key
+determinism)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.sampler import sample
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _logits(rows):
+    return jnp.asarray(np.array(rows, dtype=np.float32))
+
+
+def test_greedy_is_argmax_and_ignores_key():
+    logits = _logits([[0.1, 3.0, -1.0, 0.5], [2.0, 0.0, 1.9, -5.0]])
+    for t in (0.0, -1.0):
+        out = sample(logits, KEY, temperature=t)
+        assert out.dtype == jnp.int32
+        assert np.array_equal(np.asarray(out), [1, 0])
+    other = sample(logits, jax.random.PRNGKey(7), temperature=0.0)
+    assert np.array_equal(np.asarray(other), [1, 0])
+
+
+def test_fixed_key_is_deterministic():
+    logits = _logits([np.linspace(-1, 1, 16)])
+    a = sample(logits, KEY, temperature=0.8)
+    b = sample(logits, KEY, temperature=0.8)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_top_p_one_is_a_noop():
+    logits = _logits([np.linspace(-2, 2, 32)])
+    base = sample(logits, KEY, temperature=1.0)
+    nucleus = sample(logits, KEY, temperature=1.0, top_p=1.0)
+    assert np.array_equal(np.asarray(base), np.asarray(nucleus))
+
+
+def test_single_token_mass_always_sampled():
+    # one token holds ~all probability: every key must return it,
+    # with and without nucleus filtering
+    logits = _logits([[0.0, 50.0, 0.0, 0.0]])
+    for seed in range(8):
+        key = jax.random.PRNGKey(seed)
+        assert int(sample(logits, key, temperature=1.0)[0]) == 1
+        assert int(sample(logits, key, temperature=1.0, top_p=0.5)[0]) == 1
+
+
+def test_top_p_restricts_to_nucleus():
+    # probs ~ [0.50, 0.30, 0.15, 0.05]; top_p=0.6 nucleus = {0, 1}
+    probs = np.array([0.50, 0.30, 0.15, 0.05])
+    logits = _logits([np.log(probs)])
+    seen = {int(sample(logits, jax.random.PRNGKey(s), temperature=1.0,
+                       top_p=0.6)[0]) for s in range(64)}
+    assert seen <= {0, 1}
+    assert 0 in seen
+
+
+def test_top_p_keeps_boundary_token():
+    # nucleus mass reaches top_p exactly WITH token 1 (0.6 + 0.3 = 0.9):
+    # the token that completes the mass stays in
+    probs = np.array([0.6, 0.3, 0.1])
+    logits = _logits([np.log(probs)])
+    seen = {int(sample(logits, jax.random.PRNGKey(s), temperature=1.0,
+                       top_p=0.9)[0]) for s in range(64)}
+    assert seen <= {0, 1} and len(seen) == 2
+
+
+def test_top_p_zero_degenerates_to_argmax():
+    # an empty nucleus would mask EVERY token; the top slot is forced in,
+    # so top_p <= 0 samples the per-row argmax for any key
+    logits = _logits([[0.1, 3.0, -1.0, 0.5], [2.0, 0.0, 1.9, -5.0]])
+    for seed in range(8):
+        out = sample(logits, jax.random.PRNGKey(seed), temperature=1.0,
+                     top_p=0.0)
+        assert np.array_equal(np.asarray(out), [1, 0])
+
+
+def test_top_k_one_is_greedy_for_any_key():
+    logits = _logits([[0.3, 0.1, 2.5, 0.2], [1.0, 1.1, 0.9, 0.8]])
+    for seed in range(6):
+        out = sample(logits, jax.random.PRNGKey(seed), temperature=1.0,
+                     top_k=1)
+        assert np.array_equal(np.asarray(out), [2, 1])
+
+
+def test_top_k_and_top_p_compose():
+    # k=3 keeps {0,1,2}; p then trims the renormalized tail to {0,1}
+    probs = np.array([0.4, 0.3, 0.2, 0.1])
+    logits = _logits([np.log(probs)])
+    seen = {int(sample(logits, jax.random.PRNGKey(s), temperature=1.0,
+                       top_k=3, top_p=0.65)[0]) for s in range(64)}
+    assert seen <= {0, 1}
+
+
+def test_temperature_sharpens():
+    # very low temperature -> effectively greedy even when sampling
+    logits = _logits([[1.0, 1.2, 0.8, 1.1]])
+    outs = {int(sample(logits, jax.random.PRNGKey(s),
+                       temperature=0.01)[0]) for s in range(16)}
+    assert outs == {1}
+
+
+def test_batch_rows_filtered_independently():
+    # row 0's nucleus is {0}; row 1's is {3}: filtering is per-row
+    probs = np.array([[0.97, 0.01, 0.01, 0.01],
+                      [0.01, 0.01, 0.01, 0.97]])
+    logits = _logits(np.log(probs))
+    for seed in range(8):
+        out = np.asarray(sample(logits, jax.random.PRNGKey(seed),
+                                temperature=1.0, top_p=0.5))
+        assert np.array_equal(out, [0, 3])
+
+
+@pytest.mark.parametrize("kwargs", [
+    {"temperature": 0.0},
+    {"temperature": 1.0},
+    {"temperature": 1.0, "top_k": 2},
+    {"temperature": 1.0, "top_p": 0.9},
+])
+def test_shapes_and_dtype(kwargs):
+    logits = _logits(np.random.default_rng(0).normal(size=(5, 11)))
+    out = sample(logits, KEY, **kwargs)
+    assert out.shape == (5,) and out.dtype == jnp.int32
+    assert np.all((np.asarray(out) >= 0) & (np.asarray(out) < 11))
