@@ -13,7 +13,11 @@ command instead of tracking the module list:
 
 ``--record DIR`` writes each module's JSON record (modules declare the
 filename via ``BENCH_RECORD`` and may shape the payload via
-``record(rows) -> dict``; others get the standard rows payload).
+``record(rows) -> dict``; others get the standard rows payload). A
+module that produces SEVERAL artifacts from one run exports
+``record_files(rows) -> {filename: payload}`` instead — router_bench
+uses this to emit both BENCH_4.json (modeled grid) and BENCH_5.json
+(calibrated grid) from a single sweep.
 """
 from __future__ import annotations
 
@@ -87,7 +91,12 @@ def main(argv=None) -> None:
             rows = mod.bench()
             for row_name, us, derived in rows:
                 print(f"{row_name},{us:.2f},{derived}")
-            if args.record and hasattr(mod, "BENCH_RECORD"):
+            if args.record and hasattr(mod, "record_files"):
+                for fname, payload in mod.record_files(rows).items():
+                    with open(pathlib.Path(args.record) / fname, "w") as f:
+                        json.dump(payload, f, indent=2)
+                        f.write("\n")
+            elif args.record and hasattr(mod, "BENCH_RECORD"):
                 payload = (mod.record(rows) if hasattr(mod, "record")
                            else default_record(full, rows))
                 path = pathlib.Path(args.record) / mod.BENCH_RECORD

@@ -9,6 +9,13 @@ shared ragged KV cache, exactly one dispatch per round) — the headline
 ``dispatches/round`` figure in the ``derived`` column is the dispatch
 amortization the shared cache buys.
 
+The decode-step rows SWEEP the batch size (b=1,2,4,8): with a single
+decode point, flat dispatch overhead and per-slot work are
+indistinguishable, so ``router/calibrate.py`` — which least-squares
+fits the router's round-time model from exactly these recorded rows
+(``samples_from_bench``) — needs the sweep for a full-rank fit. See
+docs/COST_MODEL.md.
+
 Every row's ``derived`` column carries a ``... tok/s`` figure; CI greps
 these into the job summary and records the run as BENCH_3.json.
 """
@@ -39,16 +46,22 @@ def _engine_rows(engine: Engine, params, tag: str, b=8, s=32, new=32):
     out.append((f"serving/{tag}prefill_b{b}_s{s}", prefill_s * 1e6,
                 f"{b*s/prefill_s:.0f} tok/s"))
 
-    tok = np.ones((b, 1), np.int32)
-    logits, cache = engine.decode(params, cache, tok)  # warm decode
-    t0 = time.perf_counter()
-    n = 16
-    for _ in range(n):
-        logits, cache = engine.decode(params, cache, tok)
-    jax.block_until_ready(logits)
-    dec_s = (time.perf_counter() - t0) / n
-    out.append((f"serving/{tag}decode_step_b{b}", dec_s * 1e6,
-                f"{b/dec_s:.0f} tok/s"))
+    # decode sweep over batch size: the calibration samples. Each batch
+    # gets its own prefill (its own cache bucket) and warm decode; the
+    # b-sweep is what lets the round-model fit separate flat dispatch
+    # overhead from per-slot work (see router/calibrate.py).
+    for bb in (1, 2, 4, b):
+        logits, cache = engine.prefill(params, np.ones((bb, s), np.int32))
+        tok = np.ones((bb, 1), np.int32)
+        logits, cache = engine.decode(params, cache, tok)  # warm decode
+        t0 = time.perf_counter()
+        n = 16
+        for _ in range(n):
+            logits, cache = engine.decode(params, cache, tok)
+        jax.block_until_ready(logits)
+        dec_s = (time.perf_counter() - t0) / n
+        out.append((f"serving/{tag}decode_step_b{bb}", dec_s * 1e6,
+                    f"{bb/dec_s:.0f} tok/s"))
 
     t0 = time.perf_counter()
     engine.generate(params, prompt, max_new_tokens=new)

@@ -24,13 +24,29 @@ from repro.core.store import ArtifactStore
 
 @dataclasses.dataclass(frozen=True)
 class LatencyModel:
-    """Platform timing constants (calibratable; defaults ≈ AWS Lambda)."""
+    """Platform timing constants (defaults ≈ AWS Lambda).
+
+    ``per_item_s`` selects the compute-time mode everywhere this model
+    is consumed (worker invokes, router rounds):
+
+      * ``None`` — MEASURED: real compute on this host, wall-clock
+        timed. This is also the required setting when the router runs
+        under a fitted ``router.calibrate.CalibratedLatencyModel``
+        (the calibration carries the per-item term; supplying both
+        raises in ``Router``).
+      * a float — MODELED serial work: seconds per item (chunk item or
+        active decode slot). The router additionally applies
+        ``RouterConfig.round_overhead_s``/``prefill_token_factor``
+        around it; ``router/calibrate.py`` fits all three constants
+        from measured serving rows instead of hand-setting them — see
+        docs/COST_MODEL.md for the model before/after calibration.
+    """
 
     cold_start_s: float = 2.5        # runtime/container init for an ML fn
     warm_start_s: float = 0.010
     invoke_overhead_s: float = 0.050  # orchestrator -> function dispatch
     result_write_s: float = 0.050
-    per_item_s: Optional[float] = None  # None -> measure real compute
+    per_item_s: Optional[float] = None  # None -> measured (see above)
 
 
 class ServerlessFunction:

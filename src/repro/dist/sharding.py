@@ -21,6 +21,7 @@ from __future__ import annotations
 import math
 
 import jax
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.dist import context as ctx
@@ -118,6 +119,48 @@ def pick_strategy(param_specs, mesh, kind: str = "train",
     if pb / max(msize, 1) <= 0.5 * hbm_bytes:
         return "tp"
     return "fsdp_tp"
+
+
+# ---------------------------------------------------------------------------
+# Mesh slicing (replica-per-slice serving)
+# ---------------------------------------------------------------------------
+
+
+def slice_meshes(mesh, n: int):
+    """Partition ``mesh`` into ``n`` disjoint sub-meshes (replica slices).
+
+    The router's ``ReplicaPool(mesh_slices=n)`` maps each serving replica
+    onto its own slice so replicas stop sharing compute. The cut runs
+    along the first axis whose size ``n`` divides, data axes FIRST so a
+    slice normally keeps the full "model" axis (full TP degree per
+    replica); when only the model axis divides it is cut as a last
+    resort — every replica still holds one complete copy of the params
+    (params replicate over data axes and re-plan per slice), just at a
+    lower TP degree. Each slice keeps all of the parent's axis names
+    (the cut axis shrinks to ``size // n``), so the per-slice sharding
+    plans — and therefore the executable shape buckets — are identical
+    across slices.
+
+    Returns a list of ``n`` ``jax.sharding.Mesh`` over pairwise-disjoint
+    device subsets covering the parent mesh exactly. ``n == 1`` returns
+    ``[mesh]`` unchanged. Raises ``ValueError`` when no axis is
+    divisible by ``n``.
+    """
+    if n <= 0:
+        raise ValueError(f"need at least one slice, got n={n}")
+    if n == 1:
+        return [mesh]
+    names = list(mesh.axis_names)
+    order = [a for a in names if a != "model"]
+    if "model" in names:
+        order.append("model")
+    for axis in order:
+        if int(mesh.shape[axis]) % n == 0:
+            subs = np.split(mesh.devices, n, axis=names.index(axis))
+            return [jax.sharding.Mesh(s, tuple(names)) for s in subs]
+    raise ValueError(
+        f"cannot cut mesh {dict(mesh.shape)} into {n} disjoint slices: "
+        f"no axis size is divisible by {n}")
 
 
 # ---------------------------------------------------------------------------

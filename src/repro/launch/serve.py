@@ -17,6 +17,10 @@ Usage:
   python -m repro.launch.serve --n-items 256 --batch-size 32 \
       --concurrency 8 --crash-prob 0.1
   python -m repro.launch.serve --router --traffic bursty --rate 24
+  python -m repro.launch.serve --calibrate            # fit + save the
+      # measured round-time model (router/calibrate.py artifact)
+  python -m repro.launch.serve --router --calibration calibration.json \
+      --mesh 2x4 --mesh-slices 2     # calibrated clock, replica-per-slice
 
 Mesh mode: ``--mesh DxM`` (e.g. ``--mesh 2x4`` over 8 host devices, or
 on TPU the real chips) lays a ("data", "model") mesh under every worker's
@@ -42,10 +46,14 @@ from repro.serving import Engine
 
 
 def run_router(args, mesh):
-    """Online mode: live traffic, per-policy TTFT/TPOT/cost rows."""
-    from repro.router import (QueueConfig, ReplicaConfig, ReplicaPool,
-                              Router, TRAFFIC, default_policies,
-                              make_requests)
+    """Online mode: live traffic, per-policy TTFT/TPOT/cost rows.
+    Also the home of ``--calibrate`` (measure + fit + save the round
+    model on this host's engine, then use it if ``--router``)."""
+    from repro.router import (CalibratedLatencyModel, QueueConfig,
+                              ReplicaConfig, ReplicaPool, Router,
+                              RouterConfig, TRAFFIC, default_policies,
+                              fit_round_model, make_requests,
+                              measure_round_samples)
 
     cfg = configs.smoke(args.router_arch)
     model = build(cfg)
@@ -56,24 +64,59 @@ def run_router(args, mesh):
     store = ArtifactStore()
     store.put_tree("models/lm", params)
 
+    cal = None
+    cal_path = args.calibration or "calibration.json"
+    if args.calibrate:
+        samples = measure_round_samples(
+            engine, params, prompt_lens=(args.prompt_len,
+                                         2 * args.prompt_len),
+            max_len=args.prompt_len * 2 + args.max_new_tokens + 8)
+        cal = fit_round_model(samples, backend=jax.default_backend(),
+                              device_count=jax.device_count(),
+                              source="launch/serve.py --calibrate")
+        cal.save(cal_path)
+        print(f"== calibrated round model -> {cal_path}: "
+              f"{cal.summary()} ==")
+        if not args.router:
+            return {"calibration": cal.to_json()}
+    elif args.calibration:
+        cal = CalibratedLatencyModel.load(cal_path)
+        print(f"== loaded calibration {cal_path}: {cal.summary()} ==")
+    if cal is not None and args.measured_time:
+        raise SystemExit(
+            "--measured-time conflicts with --calibrate/--calibration: "
+            "the calibrated clock replaces measured wall time — drop one")
+
     arrivals = TRAFFIC[args.traffic](args.rate, args.horizon, args.seed)
-    lat = LatencyModel(cold_start_s=args.cold_start,
-                       per_item_s=None if args.measured_time
-                       else args.per_token_s)
+    if cal is not None:
+        # calibrated mode: the artifact carries the round constants —
+        # LatencyModel.per_item_s must stay None (Router errors loudly
+        # if both are supplied)
+        lat = cal.to_latency_model(cold_start_s=args.cold_start)
+        router_cfg = cal.to_router_config()
+        per_token_s = cal.per_item_s
+    else:
+        lat = LatencyModel(cold_start_s=args.cold_start,
+                           per_item_s=None if args.measured_time
+                           else args.per_token_s)
+        router_cfg = RouterConfig()
+        per_token_s = args.per_token_s
     rcfg = ReplicaConfig(
         n_slots=args.n_slots,
         max_len=args.prompt_len + args.max_new_tokens + 8)
     # one replica retires ~1/per_token_s tokens of work per second (the
-    # work-conserving time model — see router/README.md)
+    # work-conserving time model — see router/README.md + COST_MODEL.md)
     policies = default_policies(slots_per_replica=args.n_slots,
                                 max_replicas=args.max_replicas,
                                 tokens_per_s_per_replica=1.0
-                                / max(args.per_token_s, 1e-6),
+                                / max(per_token_s, 1e-6),
                                 budget_usd=args.budget_usd)
     print(f"== router: {len(arrivals)} requests over {args.horizon:.0f}s "
           f"({args.traffic} at {args.rate:.0f} rps), "
           f"prompt {args.prompt_len} + {args.max_new_tokens} new tokens, "
-          f"{args.n_slots} slots/replica ==")
+          f"{args.n_slots} slots/replica"
+          + (f", {args.mesh_slices} mesh slices" if args.mesh_slices
+             else "") + " ==")
     out = {}
     for policy in policies:
         traffic = make_requests(
@@ -85,12 +128,13 @@ def run_router(args, mesh):
             injector=FaultInjector(seed=args.seed,
                                    crash_prob=args.crash_prob,
                                    straggler_prob=args.straggler_prob),
-            store=store, params_ref="models/lm")
+            store=store, params_ref="models/lm",
+            mesh_slices=args.mesh_slices)
         router = Router(pool, policy, traffic,
                         queue_cfg=QueueConfig(max_depth=args.queue_cap,
                                               default_deadline_s=
                                               args.deadline),
-                        traffic_name=args.traffic)
+                        cfg=router_cfg, traffic_name=args.traffic)
         report = router.run()
         print(report.format_line())
         out[policy.name] = report.summary()
@@ -141,6 +185,21 @@ def main(argv=None):
     ap.add_argument("--measured-time", action="store_true",
                     help="advance the virtual clock by measured host "
                          "wall time instead of the token model")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="measure round samples on this host's engine, "
+                         "fit the round-time model (router/calibrate.py) "
+                         "and save the artifact to --calibration; with "
+                         "--router the run then uses it")
+    ap.add_argument("--calibration", default=None, metavar="PATH",
+                    help="CalibratedLatencyModel JSON to load for the "
+                         "router run (written here by --calibrate; "
+                         "default path calibration.json)")
+    ap.add_argument("--mesh-slices", type=int, default=None,
+                    help="replica-per-mesh-slice mode: partition the "
+                         "--mesh into this many disjoint sub-meshes, "
+                         "one per replica (dist.sharding.slice_meshes); "
+                         "meshless engines degrade to independent "
+                         "single-device engines")
     ap.add_argument("--budget-usd", type=float, default=1.0,
                     help="cost-cap policy budget")
     args = ap.parse_args(argv)
@@ -150,7 +209,7 @@ def main(argv=None):
         shape = tuple(int(x) for x in args.mesh.lower().split("x"))
         from repro.launch.mesh import make_host_mesh
         mesh = make_host_mesh(shape, ("data", "model"))
-    if args.router:
+    if args.router or args.calibrate:
         return run_router(args, mesh)
     cfg = configs.smoke(args.arch)
     model = build(cfg)

@@ -2,10 +2,17 @@
 
 The layer that puts LIVE traffic on the batched engines: an arrival
 queue with admission control, a replica pool (each replica = one
-``ContinuousBatcher(batched=True)`` over the shared ``Engine``) with
-cold starts and fault-injected crashes, pluggable autoscaling policies,
-and TTFT/TPOT/goodput/cost metrics. See router/README.md.
+``ContinuousBatcher(batched=True)``, over one shared ``Engine`` or —
+``mesh_slices`` mode — its own ``Engine`` on a disjoint mesh slice)
+with cold starts and fault-injected crashes, pluggable autoscaling
+policies, TTFT/TPOT/goodput/cost metrics, and a measured round-time
+calibration (``calibrate.py``). See router/README.md and
+docs/COST_MODEL.md.
 """
+from repro.router.calibrate import (CalibratedLatencyModel,  # noqa: F401
+                                    RoundSample, fit_round_model,
+                                    measure_round_samples,
+                                    samples_from_bench)
 from repro.router.metrics import (RouterReport, billing,  # noqa: F401
                                   percentile, request_latencies)
 from repro.router.policy import (AutoscalePolicy, CostCapPolicy,  # noqa: F401
@@ -14,7 +21,7 @@ from repro.router.policy import (AutoscalePolicy, CostCapPolicy,  # noqa: F401
                                  aws_replica_price_s, default_policies,
                                  tpu_replica_price_s)
 from repro.router.pool import (Replica, ReplicaConfig,  # noqa: F401
-                               ReplicaPool)
+                               ReplicaPool, SlicePool)
 from repro.router.queue import ArrivalQueue, QueueConfig  # noqa: F401
 from repro.router.router import Router, RouterConfig  # noqa: F401
 from repro.router.traffic import (TRAFFIC, bursty_arrivals,  # noqa: F401

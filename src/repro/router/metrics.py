@@ -23,7 +23,7 @@ so scaling out moves TTFT, not the bill.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -61,6 +61,9 @@ class RouterReport:
     provisioned_replica_s: float
     cost_usd: float
     tpu_cost_usd: float
+    time_model: str = "modeled"     # measured | modeled | calibrated
+    n_slices: Optional[int] = None  # mesh-slice pool capacity (None =
+    #                                 shared-engine mode)
 
     @property
     def tokens_per_s(self) -> float:
@@ -74,6 +77,8 @@ class RouterReport:
         return {
             "policy": self.policy,
             "traffic": self.traffic,
+            "time_model": self.time_model,
+            "n_slices": self.n_slices,
             "wall_time_s": round(self.wall_time_s, 4),
             "n_submitted": self.n_submitted,
             "n_completed": self.n_completed,

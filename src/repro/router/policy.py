@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List
+from typing import List, Optional
 
 from repro.core.cost_model import AWSPriceBook, TPUPriceBook
 
@@ -36,6 +36,9 @@ class PoolSnapshot:
     tokens_per_s: float        # windowed output throughput
     avg_request_tokens: float  # mean decode tokens per request
     cost_usd: float            # accrued spend so far
+    slice_capacity: Optional[int] = None  # mesh-slice pool: max replicas
+    #                                       (None = shared-engine mode,
+    #                                        unbounded)
 
 
 @dataclasses.dataclass
@@ -47,7 +50,12 @@ class AutoscalePolicy:
     name: str = "base"
 
     def target(self, s: PoolSnapshot) -> int:
-        return self.clamp(self.want(s))
+        n = self.clamp(self.want(s))
+        if s.slice_capacity is not None:
+            # a mesh-sliced pool cannot serve more replicas than it has
+            # disjoint slices — wanting more would just spin spawn/deny
+            n = min(n, s.slice_capacity)
+        return n
 
     def want(self, s: PoolSnapshot) -> int:
         raise NotImplementedError

@@ -1,13 +1,28 @@
 """Replica pool: serverless elasticity over the batched serving stack.
 
 Each replica is one "serverless function instance" of the serving
-layer: a ``ContinuousBatcher(batched=True)`` over the SHARED ``Engine``
-— its own (n_slots, max_len, …) ragged KV cache, one decode dispatch
-per round. Sharing the Engine across replicas models the platform's
-warm container pool: every replica has the same cache/prompt shape
-buckets, so spawning replica N hits the executables replica 1 compiled
-and ``engine.compile_count`` stays flat per replica (asserted by
-tests/test_router.py).
+layer: a ``ContinuousBatcher(batched=True)`` — its own
+(n_slots, max_len, …) ragged KV cache, one decode dispatch per round.
+Two compute placements:
+
+  * shared engine (default) — every replica's batcher wraps the SAME
+    ``Engine``, modeling the platform's warm container pool on one
+    host: every replica has the same cache/prompt shape buckets, so
+    spawning replica N hits the executables replica 1 compiled and
+    ``engine.compile_count`` stays flat per replica (asserted by
+    tests/test_router.py).
+  * ``mesh_slices=n`` — replicas STOP sharing compute: ``SlicePool``
+    partitions the engine's device mesh into ``n`` disjoint sub-meshes
+    (``dist.sharding.slice_meshes``) and each replica holds its own
+    ``Engine(mesh=slice)`` with params placed in that slice's layout.
+    Scale-up acquires a free slice (no free slice → the pool is at
+    capacity and ``spawn`` declines), scale-down and crashes return
+    the slice to the free pool, and each slice's engine + placed
+    params are built ONCE and cached — acquire→release→acquire churn
+    never recompiles, so per-replica compile counts stay flat as the
+    pool scales. A meshless template engine degrades to ``n``
+    independent single-device engines (the same mesh-optional contract
+    as ``dist.context``), which is how CI exercises the bookkeeping.
 
 Elasticity semantics (what the policies drive through ``scale_to``):
 
@@ -39,11 +54,77 @@ from typing import Any, List, Optional
 from repro.core.faults import NO_FAULTS, FaultInjector
 from repro.core.store import ArtifactStore
 from repro.core.worker import LatencyModel
+from repro.dist.sharding import slice_meshes
 from repro.serving.batching import ContinuousBatcher, Request
 from repro.serving.engine import Engine
 
 STARTING, READY, DRAINING, DEAD, RETIRED = (
     "starting", "ready", "draining", "dead", "retired")
+
+
+class SlicePool:
+    """Disjoint per-replica mesh slices, each with its own ``Engine``.
+
+    Built from a template engine: ``slice_meshes(engine.mesh, n)``
+    partitions the device mesh into ``n`` disjoint sub-meshes (a
+    meshless template degrades to ``n`` independent meshless engines).
+    Per slice, the engine and its slice-placed params are built lazily
+    ONCE and cached for the pool's lifetime, so releasing a slice and
+    re-acquiring it later reuses every compiled executable bucket —
+    the per-replica ``compile_count`` flatness the tests assert.
+
+    Invariant (defended here, not just documented): a slice is held by
+    at most one live replica at a time — ``acquire`` only hands out
+    free indices and ``release`` raises on double-release — and because
+    the sub-meshes are disjoint by construction, no DEVICE ever belongs
+    to two live slices.
+    """
+
+    def __init__(self, engine: Engine, params: Any, n_slices: int):
+        self.template = engine
+        self._base_params = params
+        if engine.mesh is not None:
+            self.meshes = slice_meshes(engine.mesh, n_slices)
+        else:
+            self.meshes = [None] * n_slices
+        self.n_slices = n_slices
+        self._built: dict = {}               # idx -> (engine, params)
+        self._free: List[int] = list(range(n_slices))
+        self._held: set = set()
+
+    def acquire(self) -> Optional[int]:
+        """Claim a free slice index, or ``None`` at capacity."""
+        if not self._free:
+            return None
+        idx = self._free.pop(0)
+        self._held.add(idx)
+        return idx
+
+    def release(self, idx: int) -> None:
+        if idx not in self._held:
+            raise ValueError(f"slice {idx} released while not held — a "
+                             f"replica retired twice or never acquired it")
+        self._held.remove(idx)
+        self._free.append(idx)
+
+    def engine_for(self, idx: int):
+        """(engine, slice-placed params) for slice ``idx`` — built once."""
+        if idx not in self._built:
+            eng = self.template.for_mesh(self.meshes[idx])
+            self._built[idx] = (eng, eng.shard_params(self._base_params))
+        return self._built[idx]
+
+    def compile_count(self) -> int:
+        """Total executable-bucket compiles across all slice engines."""
+        return sum(e.compile_count for e, _ in self._built.values())
+
+    def held(self) -> List[int]:
+        return sorted(self._held)
+
+    def devices_of(self, idx: int) -> List:
+        """The devices slice ``idx`` owns (empty for meshless slices)."""
+        mesh = self.meshes[idx]
+        return [] if mesh is None else list(mesh.devices.flat)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,12 +143,14 @@ class Replica:
     """One serving instance: state machine + its batcher + accounting."""
 
     def __init__(self, replica_id: int, batcher: ContinuousBatcher,
-                 spawn_t: float, ready_t: float):
+                 spawn_t: float, ready_t: float,
+                 slice_idx: Optional[int] = None):
         self.replica_id = replica_id
         self.batcher = batcher
         self.state = STARTING
         self.spawn_t = spawn_t
         self.ready_t = ready_t
+        self.slice_idx = slice_idx    # mesh-slice mode: which slice it holds
         self.retire_t: Optional[float] = None
         self.rounds = 0
         self.busy_s = 0.0            # billed virtual seconds
@@ -115,14 +198,16 @@ class Replica:
 
 
 class ReplicaPool:
-    """Spawns/retires/crashes replicas against one shared Engine."""
+    """Spawns/retires/crashes replicas — against one shared Engine, or
+    (``mesh_slices=n``) each on its own disjoint mesh slice."""
 
     def __init__(self, engine: Engine, params: Any,
                  cfg: ReplicaConfig = ReplicaConfig(),
                  lat: LatencyModel = LatencyModel(),
                  injector: FaultInjector = NO_FAULTS,
                  store: Optional[ArtifactStore] = None,
-                 params_ref: str = ""):
+                 params_ref: str = "",
+                 mesh_slices: Optional[int] = None):
         self.engine = engine
         self.params = params
         self.cfg = cfg
@@ -130,9 +215,15 @@ class ReplicaPool:
         self.injector = injector
         self.store = store
         self.params_ref = params_ref
+        self.slices = (SlicePool(engine, params, mesh_slices)
+                       if mesh_slices else None)
         self.replicas: List[Replica] = []   # every replica ever (billing)
         self.n_spawns = 0
         self.n_crashes = 0
+
+    def capacity(self) -> Optional[int]:
+        """Max live replicas (``None`` = unbounded shared-engine mode)."""
+        return None if self.slices is None else self.slices.n_slices
 
     # -- lifecycle ------------------------------------------------------
 
@@ -144,12 +235,21 @@ class ReplicaPool:
             s += self.store.read_time_s(self.store.size(self.params_ref))
         return s
 
-    def spawn(self, now: float) -> Replica:
-        batcher = ContinuousBatcher(self.engine, self.params,
+    def spawn(self, now: float) -> Optional[Replica]:
+        """Start a new replica; ``None`` when every mesh slice is held
+        (shared-engine mode never declines)."""
+        slice_idx = None
+        engine, params = self.engine, self.params
+        if self.slices is not None:
+            slice_idx = self.slices.acquire()
+            if slice_idx is None:
+                return None
+            engine, params = self.slices.engine_for(slice_idx)
+        batcher = ContinuousBatcher(engine, params,
                                     n_slots=self.cfg.n_slots,
                                     max_len=self.cfg.max_len, batched=True)
         r = Replica(len(self.replicas), batcher, spawn_t=now,
-                    ready_t=now + self.cold_start_s())
+                    ready_t=now + self.cold_start_s(), slice_idx=slice_idx)
         self.replicas.append(r)
         self.n_spawns += 1
         return r
@@ -180,7 +280,8 @@ class ReplicaPool:
                     r.state = READY
                     n += 1
             while n < target:
-                self.spawn(now)
+                if self.spawn(now) is None:   # mesh slices all held
+                    break
                 n += 1
         elif n > target:
             # cancel still-cold replicas first, then drain idle-most
@@ -189,30 +290,36 @@ class ReplicaPool:
                 if n <= target:
                     break
                 if r.state == STARTING:
-                    r.state = RETIRED
-                    r.retire_t = now
+                    self._retire(r, now)
                 else:
                     r.state = DRAINING
                 n -= 1
         self.retire_drained(now)
 
+    def _retire(self, r: Replica, now: float, state: str = RETIRED):
+        """Terminal transition: mark ``r`` retired/dead and hand its
+        mesh slice (if any) back to the free pool."""
+        r.state = state
+        r.retire_t = now
+        if self.slices is not None and r.slice_idx is not None:
+            self.slices.release(r.slice_idx)
+
     def retire_drained(self, now: float):
         for r in self.replicas:
             if r.state == DRAINING and r.n_inflight == 0:
-                r.state = RETIRED
-                r.retire_t = now
+                self._retire(r, now)
 
     def retire_all(self, now: float):
         for r in self.live():
-            r.state = RETIRED
-            r.retire_t = now
+            self._retire(r, now)
 
     def crash(self, r: Replica, now: float) -> List[Request]:
         """Kill ``r``; returns its in-flight requests (the caller
-        re-queues them — tokens already lost via reset_for_retry)."""
+        re-queues them — tokens already lost via reset_for_retry). The
+        dead replica's mesh slice returns to the free pool, so the
+        replacement the policy spawns can reuse its warm engine."""
         reqs = r.inflight()
-        r.state = DEAD
-        r.retire_t = now
+        self._retire(r, now, state=DEAD)
         self.n_crashes += 1
         return reqs
 

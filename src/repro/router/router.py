@@ -7,10 +7,11 @@ discipline as ``core/orchestrator.py``: REAL inference on this host
 concurrent replicas, crashes — is evaluated on a deterministic virtual
 clock, so a 8-replica bursty scenario reproduces faithfully on one CPU.
 
-Time model (one round = one ``ContinuousBatcher.step`` per replica):
+Time model (one round = one ``ContinuousBatcher.step`` per replica;
+full derivation in docs/COST_MODEL.md):
 
-  * measured (``LatencyModel.per_item_s is None``) — the round's
-    virtual duration is its measured host wall time;
+  * measured (``LatencyModel.per_item_s is None``, no calibration) —
+    the round's virtual duration is its measured host wall time;
   * modeled (``per_item_s`` set) — the duration is
     ``round_overhead_s + per_item_s × (prefill_tokens × prefill_token_factor
     + active_slots)``. Because every request contributes a fixed prompt
@@ -18,6 +19,16 @@ Time model (one round = one ``ContinuousBatcher.step`` per replica):
     TOTAL busy seconds are work-conserving across policies (with zero
     round overhead, exactly equal) — the online restatement of the
     paper's "same cost" claim; only TTFT moves.
+  * calibrated (``RouterConfig.calibration`` set) — the same formula,
+    but with all three constants FITTED from measured serving rows by
+    ``router/calibrate.py`` instead of hand-set. The fitted
+    ``round_overhead_s`` is nonzero on real hardware (a decode round is
+    closer to flat-latency per dispatch), so busy seconds are only
+    approximately work-conserving — which is exactly what BENCH_5's
+    modeled-vs-calibrated claims block quantifies. Supplying a
+    calibration AND hand-set round params (or a pool
+    ``LatencyModel.per_item_s``) raises: the two would silently
+    disagree.
 
 Replicas within a round run concurrently: the clock advances by the
 slowest stepped replica (synchronous rounds — the same simplification
@@ -33,7 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import List, Optional, Sequence
+from typing import Any, List, Optional, Sequence
 
 from repro.core.cost_model import AWSPriceBook, TPUPriceBook
 from repro.router.metrics import RouterReport, billing, request_latencies
@@ -43,15 +54,45 @@ from repro.router.queue import ArrivalQueue, QueueConfig
 from repro.serving.batching import Request
 
 
+_DEFAULT_PREFILL_FACTOR = 0.125
+_DEFAULT_ROUND_OVERHEAD_S = 0.0
+
+
 @dataclasses.dataclass(frozen=True)
 class RouterConfig:
-    prefill_token_factor: float = 0.125  # prefill token cost vs a decode
-    round_overhead_s: float = 0.0        # per-dispatch overhead (PR 3's
-    #                                      measured lever; 0 keeps busy
-    #                                      seconds exactly work-conserving)
+    """Round-time knobs. Two ways to drive the modeled clock:
+
+      * hand-set — ``round_overhead_s``/``prefill_token_factor`` here
+        plus ``LatencyModel.per_item_s`` on the pool (the serial
+        token-work model; the ``0.0`` overhead default keeps busy
+        seconds exactly work-conserving across policies);
+      * calibrated — ``calibration=CalibratedLatencyModel`` carries all
+        three constants, fitted from measured serving rows by
+        ``router/calibrate.py``.
+
+    Supplying BOTH raises ``ValueError`` here (hand-set round params)
+    or in ``Router`` (a pool ``per_item_s``): silent disagreement
+    between a fitted artifact and hand-set numbers is exactly the bug
+    calibration exists to remove.
+    """
+
+    prefill_token_factor: float = _DEFAULT_PREFILL_FACTOR
+    round_overhead_s: float = _DEFAULT_ROUND_OVERHEAD_S
     rate_window_s: float = 4.0           # arrival/throughput estimators
     idle_step_s: float = 0.05            # clock floor when nothing runs
     max_rounds: int = 200_000
+    calibration: Optional[Any] = None    # CalibratedLatencyModel
+
+    def __post_init__(self):
+        if self.calibration is None:
+            return
+        if (self.round_overhead_s != _DEFAULT_ROUND_OVERHEAD_S
+                or self.prefill_token_factor != _DEFAULT_PREFILL_FACTOR):
+            raise ValueError(
+                "RouterConfig got BOTH a calibration artifact and "
+                "hand-set round_overhead_s/prefill_token_factor — the "
+                "calibration supplies those; drop the hand-set values "
+                "or the calibration")
 
 
 class Router:
@@ -71,13 +112,33 @@ class Router:
         self.aws = aws
         self.tpu = tpu
         self.traffic_name = traffic_name
+        # resolve the round-time mode ONCE (see the module docstring):
+        # calibrated > modeled (hand-set per_item_s) > measured.
+        cal = cfg.calibration
+        if cal is not None:
+            if pool.lat.per_item_s is not None:
+                raise ValueError(
+                    "both RouterConfig.calibration and a hand-set "
+                    "LatencyModel.per_item_s were supplied — the "
+                    "calibration carries per_item_s; build the pool's "
+                    "LatencyModel via calibration.to_latency_model()")
+            self._overhead_s = cal.round_overhead_s
+            self._per_item_s = cal.per_item_s
+            self._prefill_factor = cal.prefill_token_factor
+            self.time_model = "calibrated"
+        else:
+            self._overhead_s = cfg.round_overhead_s
+            self._per_item_s = pool.lat.per_item_s
+            self._prefill_factor = cfg.prefill_token_factor
+            self.time_model = ("modeled" if pool.lat.per_item_s is not None
+                               else "measured")
         for r in traffic:           # hand-built tests may omit arrival_t
             if r.arrival_t is None:
                 r.arrival_t = 0.0
         self._pending = deque(sorted(traffic, key=lambda r: r.arrival_t))
         self._avg_request_tokens = (
             sum(r.max_new_tokens
-                + len(r.prompt) * cfg.prefill_token_factor
+                + len(r.prompt) * self._prefill_factor
                 for r in traffic) / max(len(traffic), 1))
         self.completed: List[Request] = []
         self.clock = 0.0
@@ -127,18 +188,18 @@ class Router:
             tokens_per_s=self._tokens_per_s(),
             avg_request_tokens=self._avg_request_tokens,
             cost_usd=self._cost_so_far(),
+            slice_capacity=pool.capacity(),
         )
 
     # -- one replica round ----------------------------------------------
 
     def _round_seconds(self, wall_s: float, n_prefill_tokens: int,
                        n_active: int) -> float:
-        per_tok = self.pool.lat.per_item_s
-        if per_tok is None:
-            return self.cfg.round_overhead_s + wall_s
-        return (self.cfg.round_overhead_s
-                + per_tok * (n_prefill_tokens
-                             * self.cfg.prefill_token_factor + n_active))
+        if self._per_item_s is None:      # measured mode
+            return self._overhead_s + wall_s
+        return (self._overhead_s
+                + self._per_item_s * (n_prefill_tokens
+                                      * self._prefill_factor + n_active))
 
     def _step_replica(self, r) -> float:
         """Run one round on replica ``r``; returns its virtual duration
@@ -288,5 +349,7 @@ class Router:
             utilization=busy / max(ready_s, 1e-12),
             busy_replica_s=busy,
             provisioned_replica_s=self.pool.provisioned_seconds(self.clock),
+            time_model=self.time_model,
+            n_slices=self.pool.capacity(),
             **bill,
         )

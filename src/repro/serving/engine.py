@@ -111,6 +111,15 @@ class Engine:
         return shd.input_shardings(
             jax.ShapeDtypeStruct(shape, jnp.float32), self.mesh)
 
+    def for_mesh(self, mesh: Optional[jax.sharding.Mesh]) -> "Engine":
+        """A fresh engine over the same model/run knobs bound to ``mesh``
+        (its own executable cache and sharding plan). This is how the
+        router's mesh-sliced replica pool gives every replica an
+        ``Engine(mesh=slice)``: the resolved ``strategy`` carries over,
+        and because slices share axis names and shapes, every slice
+        engine compiles the same executable buckets — once per slice."""
+        return dataclasses.replace(self, mesh=mesh)
+
     def shard_params(self, params):
         """Place ``params`` in the planner layout (no-op without a mesh)."""
         if self.mesh is None:

@@ -19,8 +19,9 @@ from repro.core.job import TaskRecord, Chunk, InvokeOutcome
 from repro.data.pipeline import DatasetRef, chunk_ranges
 from repro.models.common import MoEConfig
 from repro.models.moe import capacity
-from repro.router import (ArrivalQueue, QueueConfig, bursty_arrivals,
-                          diurnal_arrivals, poisson_arrivals)
+from repro.router import (ArrivalQueue, QueueConfig, RoundSample,
+                          bursty_arrivals, diurnal_arrivals,
+                          fit_round_model, poisson_arrivals)
 from repro.serving.batching import Request
 
 
@@ -200,3 +201,57 @@ def test_queue_requeue_front_preserves_order(n, k):
         assert r.generated == [] or r.rid >= k
     assert order == list(range(n))
     assert q.n_requeued == k
+
+
+# ---------------------------------------------------------------------------
+# Router: round-time calibration laws
+# ---------------------------------------------------------------------------
+
+# three designs of full rank: (prefill_tokens, active_slots) anchors
+_CAL_ANCHORS = [(0, 1), (0, 8), (256, 0)]
+
+
+@given(overhead=st.floats(0.0, 0.05), per_item=st.floats(1e-4, 0.1),
+       factor=st.floats(0.01, 1.0), n_extra=st.integers(0, 12),
+       seed=st.integers(0, 2**16))
+@settings(deadline=None, max_examples=40)
+def test_calibration_fit_error_non_increasing_with_rows(
+        overhead, per_item, factor, n_extra, seed):
+    """More measured rows never degrade the fit: with consistent samples
+    (all drawn from one ground-truth round model), the full-set error of
+    the least-squares fit is non-increasing as rows are added, and a
+    full-rank sample set recovers the model exactly."""
+    def truth(p, a):
+        return overhead + per_item * (p * factor + a)
+
+    rng = np.random.default_rng(seed)
+    pts = list(_CAL_ANCHORS) + [(int(rng.integers(0, 512)),
+                                 int(rng.integers(0, 16)))
+                                for _ in range(n_extra)]
+    samples = [RoundSample(p, a, truth(p, a)) for p, a in pts]
+    errs = []
+    for k in range(len(_CAL_ANCHORS), len(samples) + 1):
+        cal = fit_round_model(samples[:k])
+        errs.append(max(abs(cal.round_seconds(p, a) - truth(p, a))
+                        for p, a in pts))
+    for e0, e1 in zip(errs, errs[1:]):
+        assert e1 <= e0 + 1e-9
+    assert errs[-1] <= 1e-6          # consistent rows -> exact recovery
+
+
+@given(overhead=st.floats(0.0, 0.05), per_item=st.floats(1e-4, 0.1),
+       factor=st.floats(0.01, 1.0))
+@settings(deadline=None, max_examples=25)
+def test_calibration_recovers_and_is_nonnegative(overhead, per_item,
+                                                 factor):
+    """Exact parameter recovery from noise-free full-rank samples, and
+    the fitted constants are never negative (latencies can't be)."""
+    samples = [RoundSample(p, a, overhead + per_item * (p * factor + a))
+               for p, a in _CAL_ANCHORS + [(128, 4)]]
+    cal = fit_round_model(samples)
+    assert cal.round_overhead_s >= 0.0
+    assert cal.per_item_s >= 0.0
+    assert cal.prefill_token_factor >= 0.0
+    assert abs(cal.round_overhead_s - overhead) < 1e-7
+    assert abs(cal.per_item_s - per_item) < 1e-7
+    assert cal.rmse_s < 1e-7

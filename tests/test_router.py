@@ -9,21 +9,32 @@ virtual clock (modeled round times). The big invariants:
   * ``engine.compile_count`` stays FLAT per replica — every replica hits
     the executable buckets the first one compiled;
   * the BENCH_4 headline: queue-depth beats fixed-1 on p99 TTFT under a
-    burst at equal modeled cost (busy seconds are work-conserving).
+    burst at equal modeled cost (busy seconds are work-conserving);
+  * calibration (``router/calibrate.py``): exact least-squares recovery,
+    artifact round-trip, and LOUD errors when calibrated and hand-set
+    round params are both supplied;
+  * mesh slices: slice acquisition/release across scale-up → crash →
+    drain never puts one slice (or device — slow 8-device test) in two
+    live replicas, capacity clamps the policies, and per-slice engines
+    keep compile counts flat across churn.
 """
+import textwrap
+
 import jax
 import numpy as np
 import pytest
 
+from conftest import run_in_subprocess
 from repro import configs
 from repro.core import FaultInjector, LatencyModel
 from repro.models import RunConfig, build
-from repro.router import (ArrivalQueue, CostCapPolicy, FixedReplicas,
-                          PoolSnapshot, QueueConfig, QueueDepthPolicy,
-                          ReplicaConfig, ReplicaPool, Router, RouterConfig,
+from repro.router import (ArrivalQueue, CalibratedLatencyModel,
+                          CostCapPolicy, FixedReplicas, PoolSnapshot,
+                          QueueConfig, QueueDepthPolicy, ReplicaConfig,
+                          ReplicaPool, RoundSample, Router, RouterConfig,
                           ThroughputPolicy, bursty_arrivals,
-                          diurnal_arrivals, make_requests,
-                          poisson_arrivals)
+                          diurnal_arrivals, fit_round_model, make_requests,
+                          poisson_arrivals, samples_from_bench)
 from repro.serving import Engine, Request
 
 PROMPT, NEW, SLOTS, MAXLEN = 8, 4, 2, 16
@@ -297,3 +308,285 @@ def test_measured_time_mode_runs(stack):
                      lat=LatencyModel(cold_start_s=0.01, per_item_s=None))
     assert report.n_completed == arrivals.size
     assert report.busy_replica_s > 0   # measured host wall time
+
+
+# ---------------------------------------------------------------------------
+# Calibration (router/calibrate.py)
+# ---------------------------------------------------------------------------
+
+
+def _truth(p, a, overhead=0.004, per_item=0.02, factor=0.125):
+    return overhead + per_item * (p * factor + a)
+
+
+def _samples():
+    pts = [(0, 1), (0, 2), (0, 4), (256, 0), (128, 2), (64, 8)]
+    return [RoundSample(p, a, _truth(p, a)) for p, a in pts]
+
+
+def test_fit_round_model_recovers_exact_params():
+    cal = fit_round_model(_samples(), backend="cpu", device_count=1)
+    assert cal.round_overhead_s == pytest.approx(0.004, abs=1e-9)
+    assert cal.per_item_s == pytest.approx(0.02, abs=1e-9)
+    assert cal.prefill_token_factor == pytest.approx(0.125, abs=1e-7)
+    assert cal.rmse_s < 1e-10 and cal.max_abs_err_s < 1e-10
+    assert cal.n_samples == 6
+    # the model evaluates to what it was fitted on
+    assert cal.round_seconds(64, 8) == pytest.approx(_truth(64, 8))
+
+
+def test_fit_requires_three_rows():
+    with pytest.raises(ValueError, match="3 measured rows"):
+        fit_round_model(_samples()[:2])
+
+
+def test_samples_from_bench_parses_sweep_rows():
+    record = {"rows": [
+        {"name": "serving/prefill_b8_s32", "us_per_call": 5000.0,
+         "derived": "x"},
+        {"name": "serving/decode_step_b1", "us_per_call": 900.0,
+         "derived": "x"},
+        {"name": "serving/mesh_decode_step_b8", "us_per_call": 1600.0,
+         "derived": "x"},
+        # mixed-phase rows must be skipped
+        {"name": "serving/generate_b8_new32", "us_per_call": 1.0,
+         "derived": "x"},
+        {"name": "serving/slot_scheduler_64req", "us_per_call": 1.0,
+         "derived": "x"},
+    ]}
+    samples = samples_from_bench(record)
+    assert [(s.prefill_tokens, s.active_slots) for s in samples] == [
+        (256, 0), (0, 1), (0, 8)]
+    assert samples[0].seconds == pytest.approx(5e-3)
+
+
+def test_calibration_artifact_roundtrip(tmp_path):
+    cal = fit_round_model(_samples(), backend="cpu", device_count=1,
+                          source="test")
+    path = str(tmp_path / "calibration.json")
+    cal.save(path)
+    loaded = CalibratedLatencyModel.load(path)
+    assert loaded == cal
+
+
+def test_calibrated_and_hand_set_params_error_loudly():
+    cal = fit_round_model(_samples())
+    # hand-set round params alongside a calibration -> config refuses
+    with pytest.raises(ValueError, match="BOTH a calibration"):
+        RouterConfig(calibration=cal, round_overhead_s=0.1)
+    with pytest.raises(ValueError, match="BOTH a calibration"):
+        RouterConfig(calibration=cal, prefill_token_factor=0.5)
+    # a pool LatencyModel.per_item_s alongside a calibration -> Router
+    # refuses (the calibration carries the per-item term)
+    with pytest.raises(ValueError, match="per_item_s"):
+        cal.to_latency_model(per_item_s=0.01)
+
+
+def test_calibrated_router_errors_on_hand_set_pool_per_item(stack):
+    engine, params, cfg = stack
+    cal = fit_round_model(_samples())
+    pool = ReplicaPool(engine, params,
+                       ReplicaConfig(n_slots=SLOTS, max_len=MAXLEN),
+                       lat=LAT)   # LAT hand-sets per_item_s
+    with pytest.raises(ValueError, match="per_item_s"):
+        Router(pool, FixedReplicas(n=1), [],
+               cfg=RouterConfig(calibration=cal))
+
+
+def test_calibrated_router_completes_and_reports_mode(stack):
+    engine, params, cfg = stack
+    cal = fit_round_model(_samples())
+    arrivals = poisson_arrivals(6.0, 2.0, seed=6)
+    pool = ReplicaPool(engine, params,
+                       ReplicaConfig(n_slots=SLOTS, max_len=MAXLEN),
+                       lat=cal.to_latency_model(cold_start_s=0.3))
+    router = Router(pool, QueueDepthPolicy(max_replicas=3),
+                    _requests(arrivals, cfg), cfg=cal.to_router_config(),
+                    traffic_name="test")
+    report = router.run()
+    assert report.time_model == "calibrated"
+    assert report.n_completed == report.n_submitted == arrivals.size
+    # the nonzero fitted round overhead must make busy seconds STRICTLY
+    # exceed the overhead-free token-work total: each request commits
+    # PROMPT·factor prefill work and NEW-1 slot-rounds (the admission
+    # round yields the prefill token AND a decode token) — COST_MODEL.md
+    pure_work = cal.per_item_s * report.n_completed * (
+        PROMPT * cal.prefill_token_factor + NEW - 1)
+    assert report.busy_replica_s > pure_work > 0
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sliced replica pool (meshless degradation on the fast tier; the
+# real 8-device mesh partition is the slow test below)
+# ---------------------------------------------------------------------------
+
+
+def _slice_pool(engine, params, n_slices, lat=LAT, injector=None):
+    return ReplicaPool(engine, params,
+                       ReplicaConfig(n_slots=SLOTS, max_len=MAXLEN),
+                       lat=lat, injector=injector or FaultInjector(),
+                       mesh_slices=n_slices)
+
+
+def _assert_slice_lifetimes_disjoint(pool):
+    """No slice may be held by two replicas with overlapping lifetimes."""
+    by_slice = {}
+    for r in pool.replicas:
+        assert r.slice_idx is not None
+        end = r.retire_t if r.retire_t is not None else float("inf")
+        by_slice.setdefault(r.slice_idx, []).append((r.spawn_t, end))
+    for spans in by_slice.values():
+        spans.sort()
+        for (s0, e0), (s1, e1) in zip(spans, spans[1:]):
+            assert e0 <= s1 + 1e-9, "slice held by two live replicas"
+
+
+def test_slice_capacity_clamps_policies_and_scale_up(stack):
+    engine, params, cfg = stack
+    burst = np.zeros(16)                 # demand wants 8 replicas
+    pool = _slice_pool(engine, params, n_slices=2)
+    router = Router(pool, QueueDepthPolicy(max_replicas=8),
+                    _requests(burst, cfg), traffic_name="test")
+    report = router.run()
+    assert report.n_completed == 16
+    assert report.n_slices == 2
+    assert report.peak_replicas <= 2     # capacity clamps the policy
+    assert pool.slices.held() == []      # every slice returned
+    _assert_slice_lifetimes_disjoint(pool)
+
+
+def test_slice_acquire_release_across_scale_crash_drain(stack):
+    engine, params, cfg = stack
+    arrivals = np.concatenate([np.zeros(8), np.full(4, 2.0)])
+    injector = FaultInjector(seed=5, crash_prob=1.0, max_crashes=1)
+    pool = _slice_pool(engine, params, n_slices=3, injector=injector)
+    router = Router(pool, QueueDepthPolicy(max_replicas=8),
+                    _requests(arrivals, cfg), traffic_name="test")
+    report = router.run()
+    assert report.n_crashes == 1
+    assert report.n_completed == report.n_submitted == arrivals.size
+    # the crashed replica's slice went back to the free pool and a
+    # replacement (possibly on the SAME slice) served the re-queued work
+    dead = [r for r in pool.replicas if r.state == "dead"]
+    assert len(dead) == 1
+    assert pool.slices.held() == []
+    _assert_slice_lifetimes_disjoint(pool)
+    # terminal states released every slice exactly once
+    assert sorted(pool.slices._free) == list(range(3))
+
+
+def test_slice_engines_compile_once_across_churn(stack):
+    """Scale-up -> drain -> scale-up cycles must reuse each slice's
+    cached engine: per-replica compile counts stay flat after warmup."""
+    engine, params, cfg = stack
+    pool = _slice_pool(engine, params, n_slices=2)
+    warm = None
+    for cycle in range(3):
+        now = float(cycle * 10)
+        pool.scale_to(2, now)
+        pool.poll_ready(now + 1.0)
+        for i, r in enumerate(pool.ready()):
+            r.batcher.submit(Request(cycle * 10 + i,
+                                     np.ones(PROMPT, np.int32),
+                                     max_new_tokens=NEW))
+            while r.n_inflight:
+                r.step()
+        count = pool.slices.compile_count()
+        if cycle == 0:
+            warm = count
+        else:
+            assert count == warm, (
+                "re-acquiring a slice must reuse its cached engine")
+        pool.scale_to(0, now + 9.0)
+    assert pool.slices.held() == []
+
+
+def test_slice_release_invariants():
+    from repro.router import SlicePool
+    cfg = configs.smoke("qwen2-7b")
+    model = build(cfg)
+    sp = SlicePool(Engine(model, RunConfig(cache_pad=8)), None, 2)
+    a = sp.acquire()
+    b = sp.acquire()
+    assert {a, b} == {0, 1}
+    assert sp.acquire() is None          # at capacity
+    sp.release(a)
+    with pytest.raises(ValueError, match="released"):
+        sp.release(a)                    # double release is a bug
+    assert sp.acquire() == a             # freed slice is reusable
+
+
+@pytest.mark.slow
+def test_mesh_slices_8dev_disjoint_devices_and_flat_compiles():
+    """The real thing: an 8-device ("data","model") mesh cut into 4
+    disjoint slices, each replica's engine on its own sub-mesh. No
+    device ever belongs to two live slices, and scale-down/up churn
+    never recompiles (acceptance criterion for the mesh_slices mode)."""
+    run_in_subprocess(textwrap.dedent("""
+        import numpy as np, jax
+        from repro import configs
+        from repro.core import LatencyModel
+        from repro.models import RunConfig, build
+        from repro.dist.sharding import slice_meshes
+        from repro.launch.mesh import make_host_mesh
+        from repro.router import (QueueDepthPolicy, ReplicaConfig,
+                                  ReplicaPool, Router, make_requests)
+        from repro.serving import Engine, Request
+
+        assert jax.device_count() == 8
+        mesh = make_host_mesh((4, 2), ("data", "model"))
+        slices = slice_meshes(mesh, 4)
+        ids = [sorted(d.id for d in s.devices.flat) for s in slices]
+        flat = [i for s in ids for i in s]
+        assert len(flat) == len(set(flat)) == 8, "slices overlap"
+        assert all(dict(s.shape) == {"data": 1, "model": 2}
+                   for s in slices), "slices must keep the model axis"
+
+        cfg = configs.smoke("qwen2-7b")
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        engine = Engine(model, RunConfig(cache_pad=8), mesh=mesh)
+        pool = ReplicaPool(engine, params,
+                           ReplicaConfig(n_slots=2, max_len=16),
+                           lat=LatencyModel(cold_start_s=0.1,
+                                            per_item_s=0.05),
+                           mesh_slices=4)
+        warm = None
+        for cycle in range(3):
+            now = float(cycle * 10)
+            pool.scale_to(4, now)
+            pool.poll_ready(now + 1.0)
+            dev = [d.id for r in pool.live()
+                   for d in pool.slices.devices_of(r.slice_idx)]
+            assert len(dev) == len(set(dev)), (
+                "device in two live slices")
+            for i, r in enumerate(pool.ready()):
+                r.batcher.submit(Request(cycle * 10 + i,
+                                         np.ones(8, np.int32),
+                                         max_new_tokens=3))
+                while r.n_inflight:
+                    r.step()
+            count = pool.slices.compile_count()
+            if cycle == 0:
+                warm = count
+            else:
+                assert count == warm, "slice churn recompiled"
+            pool.scale_to(0, now + 9.0)
+        assert pool.slices.held() == []
+
+        # a full router run over the sliced pool also drains clean
+        pool2 = ReplicaPool(engine, params,
+                            ReplicaConfig(n_slots=2, max_len=16),
+                            lat=LatencyModel(cold_start_s=0.1,
+                                             per_item_s=0.05),
+                            mesh_slices=4)
+        reqs = make_requests(np.zeros(12), prompt_len=8,
+                             max_new_tokens=4, vocab=cfg.vocab_size,
+                             seed=0)
+        report = Router(pool2, QueueDepthPolicy(max_replicas=8), reqs,
+                        traffic_name="t").run()
+        assert report.n_completed == 12
+        assert report.n_slices == 4 and report.peak_replicas <= 4
+        assert pool2.slices.held() == []
+        print("MESH_SLICES_OK compiles=", warm)
+    """))

@@ -1,13 +1,21 @@
 """Check that relative markdown links in the repo's docs resolve.
 
-Scans every tracked ``*.md`` file, extracts ``[text](target)`` links,
-and verifies each relative target exists on disk (anchors stripped;
-http(s)/mailto links skipped). Exits 1 listing every broken link.
+Scans every ``*.md`` file under the root (``docs/``, ``benchmarks/``
+and every package README included — the rglob covers all directories
+except SKIP_DIRS), extracts ``[text](target)`` links, and verifies
+each relative target exists on disk (anchors stripped; http(s)/mailto
+links skipped). Exits 1 listing every broken link.
 
-    python tools/check_links.py [root]
+``--require PATH ...`` additionally asserts that each named file was
+among the scanned set — CI uses this so docs/COST_MODEL.md or
+benchmarks/README.md silently dropping out of coverage (renamed,
+moved, or a new SKIP_DIR) fails the job instead of passing vacuously.
+
+    python tools/check_links.py [root] [--require docs/COST_MODEL.md ...]
 """
 from __future__ import annotations
 
+import argparse
 import pathlib
 import re
 import sys
@@ -23,10 +31,12 @@ def iter_md_files(root: pathlib.Path):
             yield p
 
 
-def check(root: pathlib.Path) -> int:
+def check(root: pathlib.Path, require: tuple = ()) -> int:
     broken = []
     n_links = 0
+    scanned = set()
     for md in iter_md_files(root):
+        scanned.add(md)
         for target in LINK_RE.findall(md.read_text()):
             if target.startswith(SKIP_PREFIXES):
                 continue
@@ -37,15 +47,27 @@ def check(root: pathlib.Path) -> int:
             resolved = (md.parent / path).resolve()
             if not resolved.exists():
                 broken.append(f"{md.relative_to(root)}: {target}")
-    print(f"checked {n_links} relative links")
+    print(f"checked {n_links} relative links in {len(scanned)} files")
+    status = 0
+    missing = [r for r in require if (root / r).resolve() not in scanned]
+    if missing:
+        print("REQUIRED FILES NOT COVERED (moved, renamed, or skipped):")
+        for m in missing:
+            print(f"  {m}")
+        status = 1
     if broken:
         print("BROKEN LINKS:")
         for b in broken:
             print(f"  {b}")
-        return 1
-    return 0
+        status = 1
+    return status
 
 
 if __name__ == "__main__":
-    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".")
-    sys.exit(check(root.resolve()))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("root", nargs="?", default=".")
+    ap.add_argument("--require", nargs="*", default=(),
+                    help="files (relative to root) that MUST be scanned")
+    args = ap.parse_args()
+    sys.exit(check(pathlib.Path(args.root).resolve(),
+                   tuple(args.require)))
