@@ -16,8 +16,22 @@ fits the router's round-time model from exactly these recorded rows
 (``samples_from_bench``) — needs the sweep for a full-rank fit. See
 docs/COST_MODEL.md.
 
+The PAGED section (``serving/paged_*`` rows) measures what the
+block-paged KV cache buys over the dense shared cache:
+
+  * slot capacity at EQUAL KV bytes — dense rows reserve worst-case
+    ``max_len`` tokens up front; paged rows only consume the pages they
+    hold, so the same physical pool serves ≥ 2× the concurrent slots;
+  * warm-prefix admission — a prompt whose leading pages are already
+    registered (prefix cache) prefills only its suffix, one dispatch,
+    measurably faster than the cold full-prompt prefill;
+  * the batched-mode invariants survive paging: exactly ONE decode
+    dispatch per round and a flat compile count across admit/evict churn.
+
 Every row's ``derived`` column carries a ``... tok/s`` figure; CI greps
-these into the job summary and records the run as BENCH_3.json.
+these into the job summary and records the run as BENCH_3.json (dense +
+mesh rows) plus BENCH_6.json (paged rows + a machine-checkable
+``claims`` block).
 """
 from __future__ import annotations
 
@@ -30,9 +44,13 @@ import numpy as np
 from repro import configs
 from repro.launch.mesh import make_host_mesh
 from repro.models import RunConfig, build
-from repro.serving import ContinuousBatcher, Engine, Request, SlotScheduler
+from repro.serving import (ContinuousBatcher, Engine, PageAllocator,
+                           Request, SlotScheduler)
 
-BENCH_RECORD = "BENCH_3.json"   # benchmarks/run.py --record writes this
+BENCH_RECORD = "BENCH_3.json"        # dense + mesh rows (run.py --record)
+BENCH_RECORD_PAGED = "BENCH_6.json"  # paged rows + claims block
+
+LAST_PAGED: dict = {}   # claims from the latest bench() paged section
 
 
 def _engine_rows(engine: Engine, params, tag: str, b=8, s=32, new=32):
@@ -71,6 +89,149 @@ def _engine_rows(engine: Engine, params, tag: str, b=8, s=32, new=32):
     return out
 
 
+def _drain_peak(batcher) -> tuple:
+    """Drive a batcher dry, tracking peak concurrent slots and wall
+    time. Returns (peak_active, seconds, tokens)."""
+    peak = 0
+    t0 = time.perf_counter()
+    while not batcher.scheduler.idle:
+        batcher.step()
+        peak = max(peak, len(batcher.scheduler.active))
+        if batcher.rounds > 10_000:
+            raise RuntimeError("batcher did not drain")
+    sec = time.perf_counter() - t0
+    toks = sum(len(r.generated) for r in batcher.scheduler.completed)
+    return peak, sec, toks
+
+
+def _paged_rows(engine: Engine, params, vocab: int) -> list:
+    """serving/paged_* rows + the BENCH_6 claims (stashed in LAST_PAGED)."""
+    out = []
+    rng = np.random.default_rng(0)
+
+    # --- slot capacity at EQUAL KV bytes -------------------------------
+    # One fixed physical budget: 4 dense slots x 64-token rows = 256 KV
+    # tokens. The dense cache reserves worst-case max_len per row; the
+    # paged pool (256 tokens = 32 pages of 8, + the null page) hands
+    # rows only the pages they hold, so the SAME bytes serve >= 2x the
+    # concurrent slots on a typical mixed workload.
+    ps, dense_slots, max_len = 8, 4, 64
+    n_pages = 1 + (dense_slots * max_len) // ps
+
+    def workload():
+        reqs = [Request(0, rng.integers(0, vocab, 40).astype(np.int32),
+                        max_new_tokens=16)]        # one worst-case-ish req
+        reqs += [Request(i, rng.integers(0, vocab, 16).astype(np.int32),
+                         max_new_tokens=8) for i in range(1, 16)]
+        return reqs
+
+    dense = ContinuousBatcher(engine, params, n_slots=dense_slots,
+                              max_len=max_len)
+    for r in workload():
+        dense.submit(r)
+    dense_peak, dense_s, dense_tok = _drain_peak(dense)
+
+    paged = ContinuousBatcher(engine, params, n_slots=16, max_len=max_len,
+                              paged=True, page_size=ps, n_pages=n_pages)
+    for r in workload():
+        paged.submit(r)
+    paged_peak, paged_s, paged_tok = _drain_peak(paged)
+    ratio = paged_peak / max(dense_peak, 1)
+    out.append((f"serving/paged_slots_at_fixed_hbm_{dense_slots*max_len}tok",
+                paged_s * 1e6 / max(paged_tok, 1),
+                f"{paged_tok/paged_s:.0f} tok/s at {paged_peak} paged slots"
+                f" vs {dense_peak} dense ({ratio:.2f}x) on one"
+                f" {dense_slots * max_len}-token KV budget"))
+    dpr = paged.decode_dispatches / max(paged.rounds, 1)
+
+    # --- warm-prefix admission vs cold full-prompt prefill -------------
+    # CPU dispatch overhead is ~flat ms, so the prefix must be LONG for
+    # the suffix-only prefill to show: 7 full pages of 64 (448 tokens)
+    # + a 16-token suffix. Warm admission reads the registered pages and
+    # computes 16 tokens in its one dispatch; cold computes all 464.
+    pps, pmax = 64, 8
+    alloc = PageAllocator(n_pages=1 + 3 * pmax, page_size=pps,
+                          max_pages=pmax)
+    cache = engine.new_paged_cache(2, 1 + 3 * pmax, pps, pmax)
+    prefix = rng.integers(0, vocab, 7 * pps).astype(np.int32)
+
+    def admit_and_time(row, prompt):
+        plan = alloc.admit(row, prompt, 8)
+        nonlocal cache
+        cache = engine.assign_row_pages(cache, row, plan.pages,
+                                        plan.start_len)
+        t0 = time.perf_counter()
+        logits, cache = engine.extend_row(params, cache, row,
+                                          plan.suffix[None])
+        jax.block_until_ready(logits)
+        return plan, time.perf_counter() - t0
+
+    def fresh_prompt():
+        return np.concatenate([rng.integers(0, vocab, 7 * pps),
+                               rng.integers(0, vocab, 16)]).astype(np.int32)
+
+    # warm both executable shapes (L=464 cold, L=16 warm), then free
+    _, _ = admit_and_time(0, fresh_prompt())
+    warm_prompt = np.concatenate(
+        [prefix, rng.integers(0, vocab, 16)]).astype(np.int32)
+    plan, _ = admit_and_time(1, warm_prompt)   # registers `prefix`'s pages
+    alloc.free(0)
+    cold_us, warm_us = [], []
+    for i in range(5):
+        _, sec = admit_and_time(0, fresh_prompt())   # never matches
+        cold_us.append(sec * 1e6)
+        alloc.free(0)
+        plan, sec = admit_and_time(0, np.concatenate(
+            [prefix, rng.integers(0, vocab, 16)]).astype(np.int32))
+        assert plan.n_shared == 7, "prefix cache failed to match"
+        warm_us.append(sec * 1e6)
+        alloc.free(0)
+    cold, warm = float(np.median(cold_us)), float(np.median(warm_us))
+    out.append(("serving/paged_prefill_cold_s464", cold,
+                f"{464/(cold*1e-6):.0f} tok/s full-prompt admission"))
+    out.append(("serving/paged_prefill_warm_prefix448_s16", warm,
+                f"{16/(warm*1e-6):.0f} suffix tok/s; {cold/warm:.2f}x"
+                f" faster than cold at 448 shared prefix tokens"))
+
+    # --- churn: flat compile count + 1 dispatch/round -------------------
+    churn = ContinuousBatcher(engine, params, n_slots=4, max_len=48,
+                              paged=True, page_size=ps)
+    for i in range(8):
+        churn.submit(Request(i, rng.integers(0, vocab, 16).astype(np.int32),
+                             max_new_tokens=8))
+    churn.run()
+    warm_compiles = engine.compile_count
+    for i in range(8, 16):
+        churn.submit(Request(i, rng.integers(0, vocab, 16).astype(np.int32),
+                             max_new_tokens=8))
+    churn.run()
+    compile_delta = engine.compile_count - warm_compiles
+    churn_dpr = churn.decode_dispatches / max(churn.rounds, 1)
+    out.append(("serving/paged_churn_compiles_wave2",
+                float(compile_delta),
+                f"{compile_delta} new compiles across re-admission wave at"
+                f" {churn_dpr:.2f} dispatches/round"
+                f" ({churn.decode_dispatches} dispatches"
+                f" / {churn.rounds} rounds)"))
+
+    LAST_PAGED.clear()
+    LAST_PAGED.update({
+        "kv_budget_tokens": dense_slots * max_len,
+        "dense_slots_at_equal_kv_bytes": dense_peak,
+        "paged_slots_at_equal_kv_bytes": paged_peak,
+        "slot_capacity_ratio": round(ratio, 3),
+        "slot_capacity_ratio_geq_2": ratio >= 2.0,
+        "cold_prefill_us": round(cold, 2),
+        "warm_prefix_prefill_us": round(warm, 2),
+        "warm_prefix_speedup": round(cold / warm, 3),
+        "warm_faster_than_cold": warm < cold,
+        "decode_dispatches_per_round": round(max(dpr, churn_dpr), 3),
+        "one_dispatch_per_round": dpr == 1.0 and churn_dpr == 1.0,
+        "compile_count_flat_under_churn": compile_delta == 0,
+    })
+    return out
+
+
 def bench() -> list:
     out = []
     cfg = configs.smoke("qwen2-7b")
@@ -80,6 +241,9 @@ def bench() -> list:
     # --- meshless engine (the CI baseline) -----------------------------
     engine = Engine(model, RunConfig(cache_pad=64))
     out.extend(_engine_rows(engine, params, tag=""))
+
+    # --- paged KV cache vs the dense shared cache ----------------------
+    out.extend(_paged_rows(engine, params, cfg.vocab_size))
 
     # --- mesh-aware engine: sharded prefill→decode handoff -------------
     mesh = make_host_mesh((1, jax.device_count()), ("data", "model"))
@@ -129,21 +293,49 @@ def bench() -> list:
     return out
 
 
-def record(rows: list) -> dict:
-    """JSON payload for benchmarks/run.py --record / __main__."""
-    return {"benchmark": "serving_bench",
+def _payload(name: str, rows: list) -> dict:
+    return {"benchmark": name,
             "device_count": jax.device_count(),
             "backend": jax.default_backend(),
             "rows": [{"name": n, "us_per_call": round(us, 2),
                       "derived": d} for n, us, d in rows]}
 
 
+def record(rows: list) -> dict:
+    """BENCH_3 payload: the dense + mesh serving rows."""
+    return _payload("serving_bench",
+                    [r for r in rows
+                     if not r[0].startswith("serving/paged")])
+
+
+def record_paged(rows: list) -> dict:
+    """BENCH_6 payload: paged rows + the claims the paging layer makes
+    (slot capacity at equal KV bytes, warm-prefix speedup, dispatch and
+    compile flatness) — CI greps ``claims`` into the job summary."""
+    payload = _payload("serving_bench:paged",
+                       [r for r in rows
+                        if r[0].startswith("serving/paged")])
+    payload["claims"] = LAST_PAGED.copy()
+    return payload
+
+
+def record_files(rows: list) -> dict:
+    """One run, two artifacts (benchmarks/run.py --record)."""
+    return {BENCH_RECORD: record(rows),
+            BENCH_RECORD_PAGED: record_paged(rows)}
+
+
 if __name__ == "__main__":
+    import pathlib
     import sys
     rows = bench()
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")
-    if len(sys.argv) > 1:  # record the run, e.g. BENCH_3.json
-        with open(sys.argv[1], "w") as f:
-            json.dump(record(rows), f, indent=2)
-            f.write("\n")
+    if LAST_PAGED:
+        print(f"# paged claims: {json.dumps(LAST_PAGED)}", file=sys.stderr)
+    if len(sys.argv) > 1:  # record the run into a directory
+        outdir = pathlib.Path(sys.argv[1])
+        for fname, payload in record_files(rows).items():
+            with open(outdir / fname, "w") as f:
+                json.dump(payload, f, indent=2)
+                f.write("\n")

@@ -1,4 +1,7 @@
 from repro.kernels.decode_attention.ops import (decode_attention,  # noqa: F401
-                                                decode_attention_partials)
+                                                decode_attention_partials,
+                                                paged_decode_attention)
 from repro.kernels.decode_attention.ref import (decode_attention_partials_ref,  # noqa: F401
-                                                decode_attention_ref)
+                                                decode_attention_ref,
+                                                gather_pages,
+                                                paged_decode_attention_ref)

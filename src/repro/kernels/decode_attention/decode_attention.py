@@ -138,6 +138,21 @@ def _kernel_partials(bounds_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         l_ref[...] = l_scr[...].reshape(l_ref.shape)
 
 
+def _kernel_paged(len_ref, table_ref, q_ref, k_ref, v_ref, o_ref, m_scr,
+                  l_scr, acc_scr, **kw):
+    """Paged variant of ``_kernel``: identical tile loop and mask math.
+
+    The page table participates ONLY in the KV index map (the grid spec
+    prefetches it alongside ``lengths``); inside the kernel body the tile
+    index ``ti`` is already the row's LOGICAL page, so the column mask is
+    the same ``ti * block_t + iota`` arithmetic as the dense kernel —
+    physical indirection is invisible to the math.
+    """
+    del table_ref
+    _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            **kw)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("window", "softcap", "block_t", "interpret"))
@@ -262,3 +277,72 @@ def decode_attention_partials_kernel(q, k_cache, v_cache, bounds, *,
     )(jnp.asarray(bounds, jnp.int32), qg, k_cache, v_cache)
     return (acc.transpose(0, 2, 1, 3), l.transpose(0, 2, 1),
             m.transpose(0, 2, 1))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "interpret"))
+def paged_decode_attention_kernel(q, k_pages, v_pages, lengths, page_table,
+                                  *, window: Optional[int] = None,
+                                  softcap: Optional[float] = None,
+                                  interpret: bool = False):
+    """Flash decode through a block-paged KV cache.
+
+    q: (B,H,D); pools: (P, page_size, KV, D) — ONE physical page pool
+    shared by every row (and, under copy-on-write prefix sharing, by
+    several rows at once); page_table: (B, Pmax) int32 — row b's logical
+    page i lives at physical page ``page_table[b, i]``; lengths: (B,)
+    int32 — row b attends LOGICAL positions <= lengths[b].
+
+    The KV tile is one page: the grid's trailing axis walks logical
+    pages and the KV index map reads the scalar-prefetched page table to
+    DMA the matching physical page, clamped at the row's last valid page
+    (the same per-row HBM early exit as the dense ragged kernel — a
+    short row costs ~lengths[b] of traffic regardless of pool size).
+    Rows sharing prefix pages DMA the SAME physical tiles; no dense
+    per-row view ever materializes.
+    """
+    b, h, d = q.shape
+    ps, kv = k_pages.shape[1], k_pages.shape[2]
+    n_t = page_table.shape[1]
+    group = h // kv
+    scale = 1.0 / (d ** 0.5)
+
+    qg = q.reshape(b, kv, group, d).transpose(0, 2, 1, 3)  # (B, group, KV, D)
+
+    kernel = functools.partial(
+        _kernel_paged, scale=scale, block_t=ps, n_t=n_t, group=group,
+        window=window, softcap=softcap)
+
+    def kv_map(bi, ki, ti, lens, table):
+        return (table[bi, _clamp_tile(ti, lens[bi], ps)], 0, ki, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kv, n_t),
+        in_specs=[
+            pl.BlockSpec((1, group, 1, d),
+                         lambda bi, ki, ti, lens, table: (bi, 0, ki, 0)),
+            pl.BlockSpec((1, ps, 1, d), kv_map),
+            pl.BlockSpec((1, ps, 1, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, group, 1, d),
+                               lambda bi, ki, ti, lens, table:
+                               (bi, 0, ki, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, group, kv, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="paged_decode_attention",
+    )(jnp.asarray(lengths, jnp.int32), jnp.asarray(page_table, jnp.int32),
+      qg, k_pages, v_pages)
+    return out.transpose(0, 2, 1, 3).reshape(b, h, d)

@@ -21,10 +21,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.decode_attention.decode_attention import (
-    decode_attention_kernel, decode_attention_partials_kernel)
+    decode_attention_kernel, decode_attention_partials_kernel,
+    paged_decode_attention_kernel)
 from repro.kernels.decode_attention.ref import (_row_lengths,
                                                 decode_attention_partials_ref,
-                                                decode_attention_ref)
+                                                decode_attention_ref,
+                                                paged_decode_attention_ref)
 
 
 def decode_attention(q, k_cache, v_cache, lengths, *,
@@ -54,6 +56,34 @@ def decode_attention(q, k_cache, v_cache, lengths, *,
     return decode_attention_kernel(
         q, k_cache, v_cache, lengths, window=window, softcap=softcap,
         block_t=block_t, interpret=interpret)
+
+
+def paged_decode_attention(q, k_pages, v_pages, lengths, page_table, *,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           interpret: Optional[bool] = None):
+    """Flash decode through a block-paged KV cache (page-table indirection).
+
+    q: (B,H,D); pools: (P, page_size, KV, D); page_table: (B, Pmax)
+    int32; lengths: () or (B,) int32 — row b attends LOGICAL positions
+    j <= lengths[b]; its logical page i resolves to physical page
+    ``page_table[b, i]`` in the shared pool. Returns (B,H,D).
+
+    Small pools (total logical extent < 64) take the gather reference —
+    the same tiny-cache fallback rule as the dense wrapper.
+    """
+    b = q.shape[0]
+    lengths = _row_lengths(lengths, b)
+    page_table = jnp.asarray(page_table, jnp.int32)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if k_pages.shape[1] * page_table.shape[1] < 64:
+        return paged_decode_attention_ref(q, k_pages, v_pages, lengths,
+                                          page_table, window=window,
+                                          softcap=softcap)
+    return paged_decode_attention_kernel(
+        q, k_pages, v_pages, lengths, page_table, window=window,
+        softcap=softcap, interpret=interpret)
 
 
 def decode_attention_partials(q, k_cache, v_cache, lengths, *,

@@ -53,6 +53,35 @@ def decode_attention_ref(q, k_cache, v_cache, lengths, *,
     return o.reshape(b, h, d).astype(q.dtype)
 
 
+def gather_pages(pages, page_table):
+    """Materialize the dense per-row KV view of a paged pool.
+
+    pages: (P, ps, KV, D) physical page pool; page_table: (B, Pmax) int32
+    mapping row b's logical page i to physical page ``page_table[b, i]``.
+    Returns (B, Pmax*ps, KV, D) — row b's KV laid out contiguously, the
+    exact array a dense cache would hold. This is both the oracle for the
+    paged Pallas kernel (which reads through the table WITHOUT ever
+    materializing this) and the XLA fallback serving runs off-TPU.
+    """
+    b, pmax = page_table.shape
+    ps = pages.shape[1]
+    flat = jnp.take(pages, page_table.reshape(-1), axis=0)
+    return flat.reshape(b, pmax * ps, *pages.shape[2:])
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, lengths, page_table, *,
+                               window: Optional[float] = None,
+                               softcap: Optional[float] = None):
+    """Paged flash-decode oracle: gather through the page table, then the
+    dense ragged reference. q: (B,H,D); pools: (P, ps, KV, D);
+    page_table: (B, Pmax) int32; lengths: () or (B,) int32 (row b attends
+    LOGICAL positions j <= lengths[b]). Returns (B,H,D)."""
+    k = gather_pages(k_pages, page_table)
+    v = gather_pages(v_pages, page_table)
+    return decode_attention_ref(q, k, v, lengths, window=window,
+                                softcap=softcap)
+
+
 def decode_attention_partials_ref(q, k_blk, v_blk, lengths, *,
                                   offset=0,
                                   window: Optional[int] = None,

@@ -295,6 +295,122 @@ def attn_decode_layer(cfg: ModelConfig, p, x, k_cache, v_cache, lengths, *,
     return out_proj(p, o), k_cache, v_cache
 
 
+# ---------------------------------------------------------------------------
+# Block-paged KV cache layers (page-table indirection; see serving/paged.py
+# for the allocator that owns the physical pages and their refcounts)
+# ---------------------------------------------------------------------------
+
+
+def write_kv_pages(pool, new, page_table, lengths, page_size: int):
+    """Write ``new`` (B,1,KV,hd) into the shared page pool at each row's
+    own logical position ``lengths[b]``, resolved through its page table.
+
+    pool: (P, page_size, KV, hd). The serving layer guarantees (via the
+    allocator's copy-on-write barrier) that no two ACTIVE rows resolve
+    their write position to the same physical page; free rows all write
+    into the reserved null page 0, which is never allocated.
+    """
+    b = new.shape[0]
+    lengths = row_lengths(lengths, b)
+    pmax = page_table.shape[1]
+    slot = jnp.clip(lengths // page_size, 0, pmax - 1)
+    pages = jnp.take_along_axis(page_table, slot[:, None], axis=1)[:, 0]
+    offs = lengths % page_size
+    return pool.at[pages, offs].set(new[:, 0].astype(pool.dtype))
+
+
+def attend_decode_paged(q, k_pages, v_pages, page_table, lengths, *,
+                        window: Optional[int] = None,
+                        cap: Optional[float] = None, impl: str = "xla"):
+    """Single-token decode through a paged KV cache. q: (B,1,H,hd);
+    pools: (P, ps, KV, hd); page_table: (B, Pmax) int32.
+
+    ``impl="pallas"`` reads KV tiles through the page table inside the
+    kernel's index map (no dense view ever materializes); the XLA path
+    gathers each row's logical view first — correctness fallback, not
+    the memory win. ``seq_shard`` is NOT supported on the paged path
+    (the serving layer falls back to the dense cache under seq-shard;
+    documented in serving/README.md).
+    """
+    if impl == "seq_shard":
+        raise ValueError(
+            "paged KV caches do not support attn_impl='seq_shard' — the "
+            "serving layer uses the dense shared cache under seq-shard "
+            "(see serving/README.md)")
+    b = q.shape[0]
+    lengths = row_lengths(lengths, b)
+    if impl == "pallas":
+        from repro.kernels.decode_attention import ops as da_ops
+        return da_ops.paged_decode_attention(
+            q[:, 0], k_pages, v_pages, lengths, page_table, window=window,
+            softcap=cap)[:, None]
+    from repro.kernels.decode_attention.ref import gather_pages
+    k = gather_pages(k_pages, page_table)
+    v = gather_pages(v_pages, page_table)
+    return attend_decode(q, k, v, lengths, window=window, cap=cap,
+                         impl="xla")
+
+
+def attn_decode_layer_paged(cfg: ModelConfig, p, x, k_pages, v_pages,
+                            page_table, lengths, *, mixer: str,
+                            page_size: int, impl: str = "xla"):
+    """Paged counterpart of :func:`attn_decode_layer`: project, write the
+    new kv through each row's page table, attend through the same table.
+    Returns (y, new_k_pages, new_v_pages)."""
+    b = x.shape[0]
+    lengths = row_lengths(lengths, b)
+    q, k, v = project_qkv(cfg, p, x)
+    if cfg.pos == "rope":
+        pos = lengths[:, None]
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    window = cfg.window if mixer == "attn_local" else None
+    k_pages = write_kv_pages(k_pages, k, page_table, lengths, page_size)
+    v_pages = write_kv_pages(v_pages, v, page_table, lengths, page_size)
+    o = attend_decode_paged(q, k_pages, v_pages, page_table, lengths,
+                            window=window, cap=cfg.attn_softcap, impl=impl)
+    return out_proj(p, o), k_pages, v_pages
+
+
+def attn_extend_layer_paged(cfg: ModelConfig, p, x, k_pages, v_pages,
+                            table_row, start, *, mixer: str,
+                            page_size: int):
+    """Chunked prefill-with-history for ONE paged row.
+
+    x: (1, L, D) — the chunk occupies logical positions
+    ``start .. start+L-1`` of the row whose page table is ``table_row``
+    (Pmax,); positions < start already hold valid KV (possibly
+    SHARED prefix pages written by an earlier request — this read is
+    what makes warm-prefix prefill skip the prefix compute entirely).
+    Writes the chunk's KV through the table, then attends the L queries
+    over [history ++ chunk] causally (``q_offset=start``). Always the
+    XLA gather path — a fused Pallas chunked-prefill kernel is future
+    work; the decode hot loop is where the paged kernel lives.
+    Returns (y (1,L,D), new_k_pages, new_v_pages).
+    """
+    L = x.shape[1]
+    positions = start + jnp.arange(L)[None, :]
+    q, k, v = project_qkv(cfg, p, x)
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    pos = start + jnp.arange(L)
+    pmax = table_row.shape[0]
+    slot = jnp.clip(pos // page_size, 0, pmax - 1)
+    pages = table_row[slot]
+    offs = pos % page_size
+    k_pages = k_pages.at[pages, offs].set(k[0].astype(k_pages.dtype))
+    v_pages = v_pages.at[pages, offs].set(v[0].astype(v_pages.dtype))
+    from repro.kernels.decode_attention.ref import gather_pages
+    kr = gather_pages(k_pages, table_row[None])  # (1, Pmax*ps, KV, hd)
+    vr = gather_pages(v_pages, table_row[None])
+    window = cfg.window if mixer == "attn_local" else None
+    o = _attend_dense(q, kr.astype(q.dtype), vr.astype(q.dtype),
+                      mask_kind="causal", window=window,
+                      cap=cfg.attn_softcap, q_offset=start)
+    return out_proj(p, o), k_pages, v_pages
+
+
 def cross_attn_forward(cfg: ModelConfig, p, x, enc_k, enc_v, *,
                        impl: str = "xla"):
     """Decoder cross-attention against precomputed encoder K/V."""

@@ -109,6 +109,26 @@ class Model:
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                             self.cache_specs(batch, max_len, enc_len))
 
+    def paged_cache_specs(self, batch: int, n_pages: int, page_size: int,
+                          max_pages: int):
+        """Block-paged cache tree (decoder-only, attention-only patterns —
+        raises ValueError otherwise; those stay on the dense cache)."""
+        if self.cfg.encdec:
+            raise ValueError("encoder-decoder models have no paged cache "
+                             "layout (cross-attn KV is per-request dense)")
+        return transformer.paged_cache_specs(self.cfg, batch, n_pages,
+                                             page_size, max_pages)
+
+    def extend_row(self, run: RunConfig, params, cache, row, tokens):
+        """Chunked prefill-with-history of one paged row (cold admission
+        at start=0 or warm continuation past a shared prefix) — ONE
+        dispatch either way. Returns (last-token logits (1,V), cache)."""
+        if self.cfg.encdec:
+            raise ValueError("extend_row requires a PagedCache "
+                             "(decoder-only models)")
+        return transformer.extend_paged(self.cfg, run, params, cache, row,
+                                        tokens)
+
     # -- dry-run inputs ---------------------------------------------------
     def input_specs(self, shape: str, run: RunConfig = RunConfig()):
         """(kind, batch_inputs, cache_or_None) — all ShapeDtypeStruct."""

@@ -263,6 +263,72 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
                         cache_specs(cfg, batch, max_len))
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedCache:
+    """Block-paged decode cache: shared physical page pools + per-row page
+    tables.
+
+    KV leaves are ``(G, n_pages, page_size, KV, hd)`` — a POOL of physical
+    pages with no batch dim; ``page_table`` (B, max_pages) int32 maps row
+    b's logical page i to a physical page, so rows only consume HBM for
+    pages they actually hold, and N rows sharing a prompt prefix can map
+    their leading logical pages to ONE physical copy
+    (``serving.paged.PageAllocator`` owns the mapping + refcounts).
+
+    Physical page 0 is the reserved NULL page: it is never allocated, and
+    a freed row's table is all-zeros — its inert per-round decode writes
+    land harmlessly in page 0 instead of a page some other row now owns.
+
+    ``page_size`` is static (pytree aux data), so caches with different
+    page sizes hash to different jit buckets.
+    """
+
+    layers: tuple   # tuple over pattern positions; kv leaves (G,P,ps,KV,hd)
+    page_table: Any  # (B, max_pages) int32 — physical page per logical page
+    lengths: Any    # (B,) int32 — per-row number of valid tokens
+    page_size: int = 16
+
+    def tree_flatten(self):
+        return (self.layers, self.page_table, self.lengths), self.page_size
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, page_size=aux)
+
+
+def paged_cache_specs(cfg: ModelConfig, batch: int, n_pages: int,
+                      page_size: int, max_pages: int):
+    """Abstract PagedCache tree. ``n_pages`` physical pages per layer pool
+    (page 0 reserved as null); each row addresses up to ``max_pages``
+    logical pages (max_pages * page_size = the row's max_len).
+
+    Only attention-only patterns page: SSM state is O(1) per row (nothing
+    to page), and mixed patterns would need a second cache layout — the
+    serving layer keeps those on the dense shared cache.
+    """
+    for spec in cfg.pattern:
+        if not spec.mixer.startswith("attn"):
+            raise ValueError(
+                f"paged KV caches require an attention-only pattern; mixer "
+                f"{spec.mixer!r} has no paged layout (use the dense cache)")
+    g = cfg.n_groups
+    kv = jax.ShapeDtypeStruct(
+        (g, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16)
+    return PagedCache(
+        layers=tuple({"k": kv, "v": kv} for _ in cfg.pattern),
+        page_table=jax.ShapeDtypeStruct((batch, max_pages), jnp.int32),
+        lengths=jax.ShapeDtypeStruct((batch,), jnp.int32),
+        page_size=page_size)
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, n_pages: int,
+                     page_size: int, max_pages: int):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        paged_cache_specs(cfg, batch, n_pages, page_size, max_pages))
+
+
 # ---------------------------------------------------------------------------
 # Prefill
 # ---------------------------------------------------------------------------
@@ -273,7 +339,13 @@ def prefill(cfg: ModelConfig, run: RunConfig, params, *, tokens=None,
     """Returns (last-token logits (B,V), populated Cache)."""
     ref = tokens if tokens is not None else embeddings
     b, s = ref.shape[0], ref.shape[1]
-    max_len = max_len or (s + run.cache_pad)
+    if max_len is None:
+        # `is None`, not falsy: max_len=0 must NOT silently become
+        # s + cache_pad — it is a caller bug and raises below.
+        max_len = s + run.cache_pad
+    if max_len < s:
+        raise ValueError(
+            f"max_len={max_len} cannot hold the {s}-token prompt")
     positions = jnp.arange(s)[None, :]
     x = _embed_in(cfg, params, tokens, embeddings, positions)
 
@@ -338,6 +410,7 @@ def decode_step(cfg: ModelConfig, run: RunConfig, params, cache: Cache,
     a full layer slice per step (measured 8 GB/chip/step on command-r
     decode_32k, §Perf iteration 9).
     """
+    paged = isinstance(cache, PagedCache)
     lengths = cache.lengths
     pos = lengths[:, None]  # (B,1) — per-row positions
     x = _embed_in(cfg, params, token, embedding, pos)
@@ -351,9 +424,15 @@ def decode_step(cfg: ModelConfig, run: RunConfig, params, cache: Cache,
         for spec, p, c in zip(cfg.pattern, gp, lc):
             h = apply_norm(cfg, p["norm1"], x)
             if spec.mixer.startswith("attn"):
-                h, nk, nv = attn_lib.attn_decode_layer(
-                    cfg, p["attn"], h, c["k"], c["v"], lengths,
-                    mixer=spec.mixer, impl=run.attn_impl)
+                if paged:
+                    h, nk, nv = attn_lib.attn_decode_layer_paged(
+                        cfg, p["attn"], h, c["k"], c["v"], cache.page_table,
+                        lengths, mixer=spec.mixer,
+                        page_size=cache.page_size, impl=run.attn_impl)
+                else:
+                    h, nk, nv = attn_lib.attn_decode_layer(
+                        cfg, p["attn"], h, c["k"], c["v"], lengths,
+                        mixer=spec.mixer, impl=run.attn_impl)
                 new_caches.append({"k": nk, "v": nv})
             else:
                 h, nc = ssm_lib.ssm_decode(cfg, cfg.ssm, p["ssm"], h, c)
@@ -382,4 +461,81 @@ def decode_step(cfg: ModelConfig, run: RunConfig, params, cache: Cache,
         params["blocks"])
     x = apply_norm(cfg, params["final_norm"], x)
     logits = _lm_head(cfg, params, x[:, 0])
+    if paged:
+        # every row's device length advances, including FREE rows — their
+        # zeroed table routes the inert write to null page 0.
+        return logits, PagedCache(layers=new_layers,
+                                  page_table=cache.page_table,
+                                  lengths=lengths + 1,
+                                  page_size=cache.page_size)
     return logits, Cache(layers=new_layers, lengths=lengths + 1)
+
+
+def extend_paged(cfg: ModelConfig, run: RunConfig, params, cache: PagedCache,
+                 row, tokens):
+    """Chunked prefill-with-history for ONE row of a PagedCache.
+
+    tokens: (1, L) int32 occupying logical positions
+    ``start .. start+L-1`` where ``start = cache.lengths[row]``. This is
+    the single admission primitive of the paged serving path — ONE
+    dispatch whether the row is cold (start=0, L = full prompt) or warm
+    (start = shared-prefix length, L = the divergent suffix): the chunk's
+    queries attend causally over [history ++ chunk], so a warm admission
+    reads the shared prefix pages instead of recomputing them.
+
+    ``row`` is a traced scalar — one compiled executable serves every
+    slot. Returns (last-token logits (1, V), cache with
+    ``lengths[row] = start + L``).
+    """
+    L = tokens.shape[1]
+    row = jnp.asarray(row, jnp.int32)
+    start = jax.lax.dynamic_index_in_dim(cache.lengths, row, 0,
+                                         keepdims=False)
+    table_row = jax.lax.dynamic_index_in_dim(cache.page_table, row, 0,
+                                             keepdims=False)
+    positions = start + jnp.arange(L)[None, :]
+    x = _embed_in(cfg, params, tokens, None, positions)
+
+    def group(carry, gp):
+        x, layers, g = carry
+        lc = jax.tree.map(
+            lambda t: jax.lax.dynamic_index_in_dim(t, g, 0, keepdims=False),
+            layers)
+        new_caches = []
+        for spec, p, c in zip(cfg.pattern, gp, lc):
+            h = apply_norm(cfg, p["norm1"], x)
+            # paged_cache_specs guarantees an attention-only pattern
+            h, nk, nv = attn_lib.attn_extend_layer_paged(
+                cfg, p["attn"], h, c["k"], c["v"], table_row, start,
+                mixer=spec.mixer, page_size=cache.page_size)
+            new_caches.append({"k": nk, "v": nv})
+            if cfg.sandwich_norms:
+                h = apply_norm(cfg, p["post_norm1"], h)
+            x = x + h
+            if spec.mlp != "none":
+                h = apply_norm(cfg, p["norm2"], x)
+                if spec.mlp == "moe":
+                    h, _ = moe_lib.moe_apply(cfg, cfg.moe, p["moe"], h,
+                                             impl=run.moe_impl)
+                else:
+                    h = mlp_lib.mlp_apply(cfg, p["mlp"], h)
+                if cfg.sandwich_norms:
+                    h = apply_norm(cfg, p["post_norm2"], h)
+                x = x + h
+        new_layers = jax.tree.map(
+            lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                full, new.astype(full.dtype), g, 0),
+            layers, tuple(new_caches))
+        return (x, new_layers, g + 1), None
+
+    (x, new_layers, _), _ = jax.lax.scan(
+        group, (x, cache.layers, jnp.zeros((), jnp.int32)),
+        params["blocks"])
+    x = apply_norm(cfg, params["final_norm"], x[:, -1])
+    logits = _lm_head(cfg, params, x)
+    new_lengths = jax.lax.dynamic_update_index_in_dim(
+        cache.lengths, start + L, row, 0)
+    return logits, PagedCache(layers=new_layers,
+                              page_table=cache.page_table,
+                              lengths=new_lengths,
+                              page_size=cache.page_size)

@@ -63,14 +63,32 @@ class ArrivalQueue:
         self._q.append(req)
         return True
 
-    def requeue(self, reqs: Iterable[Request]) -> int:
-        """Crash re-queue at the FRONT (in original order); returns count."""
-        reqs = list(reqs)
-        for req in reversed(reqs):
+    def requeue(self, reqs: Iterable[Request],
+                now: Optional[float] = None) -> int:
+        """Crash re-queue at the FRONT (in original order); returns the
+        number actually requeued.
+
+        When ``now`` (the crash time) is given and expiry applies, a
+        request whose deadline has ALREADY passed in flight goes
+        straight to ``expired`` — counted exactly ONCE, with no
+        ``reset_for_retry`` and no ``n_requeued`` tick. Re-queuing it
+        would only burn a front-of-queue slot before ``pop`` expired it
+        anyway, while inflating the retry accounting the report reads.
+        """
+        requeued = []
+        for req in reqs:
+            if (now is not None and self.cfg.drop_expired
+                    and req.deadline_s is not None
+                    and req.arrival_t is not None
+                    and now - req.arrival_t > req.deadline_s):
+                self.expired.append(req)
+                continue
+            requeued.append(req)
+        for req in reversed(requeued):
             req.reset_for_retry()
             self._q.appendleft(req)
-        self.n_requeued += len(reqs)
-        return len(reqs)
+        self.n_requeued += len(requeued)
+        return len(requeued)
 
     def pop(self, now: float) -> Optional[Request]:
         """Next dispatchable request, dropping expired ones on the way."""

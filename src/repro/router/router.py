@@ -217,14 +217,30 @@ class Router:
         r.busy_s += round_s            # crashed rounds are billed too
         done_now = r.drain_completed()
 
+        # a request the replica's cache can never hold is rejected at
+        # admission (the batcher keeps the round alive — see
+        # ContinuousBatcher); count it with the queue's rejections. This
+        # drains BEFORE the crash branch: a rejection stands even when
+        # the round that made it crashes (retrying it would just reject
+        # again — every replica shares the same cache capacity).
+        rejected_now = r.batcher.take_rejected()
+        for q in rejected_now:
+            self.queue.rejected.append(q)
+            self._log("reject", rid=q.rid, replica=r.replica_id,
+                      reason="capacity")
+
         if crashed:
             # the round's work is lost: everything that was in flight
             # (or finished during the doomed round) restarts from scratch
-            lost = pre_inflight
+            # — except requests already past their deadline, which the
+            # queue counts as EXPIRED (once, not also retried), and
+            # requests the round REJECTED, which stay rejected
+            lost = [q for q in pre_inflight
+                    if not any(q is rj for rj in rejected_now)]
             self.pool.crash(r, self.clock + round_s)
-            self.queue.requeue(lost)
-            self._log("crash", replica=r.replica_id,
-                      requeued=len(lost))
+            n_req = self.queue.requeue(lost, self.clock + round_s)
+            self._log("crash", replica=r.replica_id, requeued=n_req,
+                      expired=len(lost) - n_req)
             return round_s
 
         t_visible = self.clock + round_s

@@ -6,4 +6,6 @@ SlotScheduler admission protocol, and the mesh / sharding knobs.
 from repro.serving.batching import (ContinuousBatcher, Request,  # noqa: F401
                                     SlotScheduler)
 from repro.serving.engine import Engine, timed  # noqa: F401
+from repro.serving.paged import (AdmissionPlan, PageAllocator,  # noqa: F401
+                                 PagesExhausted)
 from repro.serving.sampler import sample  # noqa: F401

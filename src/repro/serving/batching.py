@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.engine import Engine
+from repro.serving.paged import PageAllocator, PagesExhausted
 
 
 @dataclasses.dataclass
@@ -140,6 +141,25 @@ class ContinuousBatcher:
     ``batched=False``: legacy per-slot mode — each slot owns a batch-1
     cache and every active slot costs one decode dispatch per round.
 
+    ``paged=True`` (requires ``batched=True`` and no mesh — it silently
+    falls back to the dense shared cache otherwise, the documented
+    seq-shard fallback): slots are rows of a block-PAGED cache. A
+    ``serving.paged.PageAllocator`` maps each row's logical pages onto a
+    shared physical pool, admission is ``assign_row_pages`` +
+    ``extend_row`` (ONE dispatch cold or warm — a prompt sharing a
+    registered prefix maps its leading pages to the existing physical
+    copy and only computes the suffix), each round runs the allocator's
+    copy-on-write barrier then the SAME single ragged decode dispatch,
+    and completion returns the row's pages to the free list. A request
+    the pool can't currently hold is requeued at the front (pages free
+    as rows complete); one that can NEVER fit is rejected.
+
+    A request whose prompt + max_new_tokens exceeds the shared cache
+    capacity is REJECTED at admission (``rejected`` /
+    :meth:`take_rejected`) — the round, and every other slot in it,
+    stays alive. (This used to raise out of ``step()``, killing a whole
+    router round mid-traffic when one long prompt arrived late.)
+
     Counters: ``decode_dispatches`` = ``Engine.decode`` calls (what the
     batched mode collapses to 1/round), ``decode_steps`` = slot-steps of
     decode work (identical between modes for the same workload),
@@ -151,6 +171,9 @@ class ContinuousBatcher:
     n_slots: int = 4
     max_len: Optional[int] = None
     batched: bool = True
+    paged: bool = False
+    page_size: int = 16
+    n_pages: Optional[int] = None   # physical pool size; default = worst case
 
     def __post_init__(self):
         self.scheduler = SlotScheduler(self.n_slots)
@@ -161,9 +184,28 @@ class ContinuousBatcher:
         self.decode_steps = 0
         self.decode_dispatches = 0
         self.rounds = 0
+        self.rejected: List[Request] = []
+        if self.paged and (self.engine.mesh is not None or not self.batched):
+            # paged serving is single-host batched-mode only: mesh
+            # layouts (seq_shard in particular needs a contiguous
+            # sequence dim to shard) stay on the dense shared cache
+            self.paged = False
+        self.allocator: Optional[PageAllocator] = None
+        self._host_len: Dict[int, int] = {}   # paged: row -> current length
 
     def submit(self, req: Request):
         self.scheduler.submit(req)
+
+    def take_rejected(self) -> List[Request]:
+        """Drain requests rejected at admission (capacity they can never
+        fit). The router counts these in its ``rejected`` partition."""
+        out, self.rejected = self.rejected, []
+        return out
+
+    def _reject(self, slot: int):
+        req = self.scheduler.slots[slot]
+        self.scheduler.slots[slot] = None
+        self.rejected.append(req)
 
     def step(self) -> List[int]:
         """One scheduling round: admit (prefill) + decode.
@@ -173,7 +215,9 @@ class ContinuousBatcher:
         were newly admitted this round.
         """
         admitted = self.scheduler.admit()
-        if self.batched:
+        if self.paged:
+            self._step_paged(admitted)
+        elif self.batched:
             self._step_batched(admitted)
         else:
             self._step_per_slot(admitted)
@@ -199,11 +243,11 @@ class ContinuousBatcher:
                 self.cache = self.engine.new_cache(self.n_slots,
                                                    self.max_len)
             if len(req.prompt) + req.max_new_tokens > self.max_len:
-                raise ValueError(
-                    f"request {req.rid} needs {len(req.prompt)} prompt + "
-                    f"{req.max_new_tokens} new tokens but the shared "
-                    f"cache holds {self.max_len} — construct "
-                    f"ContinuousBatcher with a larger max_len")
+                # the cache is already sized — this request can NEVER
+                # fit. Reject it and keep the round (and every other
+                # slot in it) alive instead of raising out of step().
+                self._reject(slot)
+                continue
             logits, self.cache = self.engine.prefill_into(
                 self.params, self.cache, slot, req.prompt[None],
                 max_len=self.max_len)
@@ -224,6 +268,88 @@ class ContinuousBatcher:
     def _commit_batched(self, slot: int, tok: int):
         self.scheduler.step_done(slot, tok)
         if self.scheduler.slots[slot] is None:  # completed -> free the row
+            self.cache = self.engine.free_row(self.cache, slot)
+
+    # -- paged: shared physical pool, prefix sharing, COW, 1 dispatch ---
+
+    def _init_paged(self):
+        if self.max_len is None:
+            known = [r for r in self.scheduler.slots
+                     if r is not None] + self.scheduler.queue
+            self.max_len = max(
+                len(r.prompt) for r in known) + self.engine.run.cache_pad
+        max_pages = -(-self.max_len // self.page_size)
+        self.max_len = max_pages * self.page_size  # whole pages
+        if self.n_pages is None:
+            # worst case — every slot at full capacity — plus null page 0.
+            # The HBM win comes from passing a SMALLER pool: rows only
+            # consume pages they hold, so a pool sized for the ACTUAL
+            # working set serves far more slots at equal KV bytes
+            # (benchmarks/serving_bench.py measures exactly this).
+            self.n_pages = 1 + self.n_slots * max_pages
+        self.allocator = PageAllocator(self.n_pages, self.page_size,
+                                       max_pages)
+        self.cache = self.engine.new_paged_cache(
+            self.n_slots, self.n_pages, self.page_size, max_pages)
+
+    def _step_paged(self, admitted: List[int]):
+        for slot in admitted:
+            req = self.scheduler.slots[slot]
+            if self.cache is None:
+                self._init_paged()
+            need = len(req.prompt) + req.max_new_tokens
+            if need > self.max_len:
+                self._reject(slot)   # can never fit a row
+                continue
+            try:
+                plan = self.allocator.admit(slot, req.prompt,
+                                            req.max_new_tokens)
+            except PagesExhausted:
+                if self.allocator.rows and \
+                        -(-need // self.page_size) <= self.n_pages - 1:
+                    # TRANSIENT: active rows will return pages as they
+                    # complete — requeue at the front, keep the round
+                    self.scheduler.slots[slot] = None
+                    self.scheduler.queue.insert(0, req)
+                else:
+                    self._reject(slot)  # no active row will ever free
+                continue
+            self.cache = self.engine.assign_row_pages(
+                self.cache, slot, plan.pages, plan.start_len)
+            logits, self.cache = self.engine.extend_row(
+                self.params, self.cache, slot, plan.suffix[None])
+            self._host_len[slot] = len(req.prompt)
+            tok = int(jnp.argmax(logits[0]))
+            self._tokens[slot, 0] = tok
+            self._commit_paged(slot, tok)
+        if not self.scheduler.active:
+            return
+        for slot in list(self.scheduler.active):
+            # copy-on-write barrier: the page this row writes this round
+            # must be exclusively owned (only forked rows ever trip it)
+            cow = self.allocator.writable_page(slot, self._host_len[slot])
+            if cow is not None:
+                src, dst = cow
+                self.cache = self.engine.cow_copy_page(self.cache, src,
+                                                       dst)
+                self.cache = self.engine.assign_row_pages(
+                    self.cache, slot, self.allocator.rows[slot],
+                    self._host_len[slot])
+        logits, self.cache = self.engine.decode(self.params, self.cache,
+                                                self._tokens)
+        self.decode_dispatches += 1
+        self.decode_steps += len(self.scheduler.active)
+        toks = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self._tokens[:, 0] = toks
+        for slot in list(self.scheduler.active):
+            self._host_len[slot] += 1
+            self._commit_paged(slot, int(toks[slot]))
+
+    def _commit_paged(self, slot: int, tok: int):
+        self.scheduler.step_done(slot, tok)
+        if self.scheduler.slots[slot] is None:  # completed -> free pages
+            self.allocator.free(slot)
+            self._host_len.pop(slot, None)
             self.cache = self.engine.free_row(self.cache, slot)
 
     # -- legacy per-slot: one cache + one dispatch per active slot ------

@@ -43,9 +43,16 @@ from repro.serving.sampler import sample
 
 
 def _shape_key(tree) -> tuple:
-    """Hashable shape/dtype bucket for a pytree of arrays or structs."""
-    return tuple((tuple(l.shape), jnp.dtype(l.dtype).name)
-                 for l in jax.tree.leaves(tree))
+    """Hashable shape/dtype bucket for a pytree of arrays or structs.
+
+    The treedef participates in the key: a dense ``Cache`` and a
+    ``PagedCache`` (whose static ``page_size`` rides in the treedef's
+    aux data) must land in DIFFERENT executable buckets even if their
+    leaf shapes happened to coincide.
+    """
+    return (jax.tree.structure(tree),) + tuple(
+        (tuple(l.shape), jnp.dtype(l.dtype).name)
+        for l in jax.tree.leaves(tree))
 
 
 @dataclasses.dataclass
@@ -231,7 +238,17 @@ class Engine:
         """
         tokens = jnp.asarray(tokens)
         b, s = tokens.shape
-        max_len = max_len or (s + self.run.cache_pad)
+        if max_len is None:
+            # `is None`, NOT falsy: an explicit max_len=0 used to silently
+            # become s + cache_pad here — callers sizing caches off a
+            # conditional expression hit it as corrupted capacity, not an
+            # error. Now it raises like any other undersized value.
+            max_len = s + self.run.cache_pad
+        if max_len <= 0:
+            raise ValueError(f"max_len must be positive, got {max_len}")
+        if s > max_len:
+            raise ValueError(
+                f"max_len={max_len} cannot hold the {s}-token prompt")
         with self._ctx():
             batch = self.shard_inputs({"tokens": tokens})
             fn = self._get_exec(
@@ -271,6 +288,10 @@ class Engine:
         device allocates only its own shard — the full cache never
         materializes on one device, not even transiently.
         """
+        if batch <= 0 or max_len <= 0:
+            raise ValueError(
+                f"new_cache needs positive batch/max_len, got "
+                f"batch={batch} max_len={max_len}")
         specs = self.model.cache_specs(batch, max_len, enc_len)
         if self.mesh is None:
             return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
@@ -337,6 +358,8 @@ class Engine:
             max_len = next((l.shape[2] for l in jax.tree.leaves(cache)
                             if getattr(l, "ndim", 0) >= 5),
                            s + self.run.cache_pad)
+        if max_len <= 0:
+            raise ValueError(f"max_len must be positive, got {max_len}")
         if s > max_len:
             raise ValueError(
                 f"prompt of {s} tokens exceeds the shared cache's "
@@ -356,7 +379,18 @@ class Engine:
             lengths = jax.lax.dynamic_update_slice(
                 cache.lengths, jnp.zeros((1,), cache.lengths.dtype),
                 (row,))
-            return dataclasses.replace(cache, lengths=lengths)
+            cache = dataclasses.replace(cache, lengths=lengths)
+            if hasattr(cache, "page_table"):
+                # paged eviction also nulls the row's page table so its
+                # inert per-round decode writes land in the reserved
+                # null page 0, never in a page another row now owns
+                table = jax.lax.dynamic_update_slice(
+                    cache.page_table,
+                    jnp.zeros((1, cache.page_table.shape[1]),
+                              cache.page_table.dtype),
+                    (row, jnp.zeros((), jnp.int32)))
+                cache = dataclasses.replace(cache, page_table=table)
+            return cache
 
         if self.mesh is None:
             return jax.jit(_free, donate_argnums=donate)
@@ -374,6 +408,143 @@ class Engine:
             fn = self._get_exec("free_row", _shape_key(cache),
                                 lambda: self._jit_free_row(cache))
             return fn(cache, jnp.asarray(row, jnp.int32))
+
+    # ------------------------------------------------------------------
+    # Block-paged shared cache (page-table indirection + prefix sharing)
+    # ------------------------------------------------------------------
+    # Device half of the paged serving path; the host half — which row
+    # owns which physical page, refcounts, prefix matching, the COW
+    # barrier — is ``serving.paged.PageAllocator``. The lifecycle the
+    # batcher drives: new_paged_cache → (admit → assign_row_pages →
+    # extend_row) per row → decode (the SAME ragged entry point — the
+    # PagedCache bucket routes to the paged kernel) → free_row.
+    # Single-host only: under a mesh (and in particular under seq_shard,
+    # whose collective needs a contiguous sequence dim to shard) the
+    # serving layer stays on the dense shared cache — see
+    # serving/README.md.
+
+    def new_paged_cache(self, batch: int, n_pages: int, page_size: int,
+                        max_pages: int):
+        """Allocate an EMPTY paged cache: zeroed page pools (page 0 =
+        reserved null page), all-null page tables, all lengths 0."""
+        if self.mesh is not None:
+            raise ValueError(
+                "paged KV caches are single-host only — use new_cache "
+                "under a mesh (see serving/README.md)")
+        if min(batch, n_pages, page_size, max_pages) <= 0:
+            raise ValueError("paged cache dims must be positive")
+        specs = self.model.paged_cache_specs(batch, n_pages, page_size,
+                                             max_pages)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+
+    def _jit_assign_row(self):
+        donate = (0,) if self.donate_cache else ()
+
+        def _assign(cache, row, table_row, start_len):
+            table = jax.lax.dynamic_update_slice(
+                cache.page_table, table_row[None],
+                (row, jnp.zeros((), jnp.int32)))
+            lengths = jax.lax.dynamic_update_slice(
+                cache.lengths, start_len[None].astype(cache.lengths.dtype),
+                (row,))
+            return dataclasses.replace(cache, page_table=table,
+                                       lengths=lengths)
+        return jax.jit(_assign, donate_argnums=donate)
+
+    def assign_row_pages(self, cache, row, pages, start_len=0):
+        """Install ``row``'s logical→physical page map (padded with null
+        page 0) and set its length to ``start_len`` — the shared-prefix
+        length on warm admission, 0 cold, or the row's current length
+        when reinstalling after a copy-on-write repoint. ``row`` and the
+        map are traced: one executable per cache bucket, not per slot."""
+        max_pages = cache.page_table.shape[1]
+        if len(pages) > max_pages:
+            raise ValueError(f"{len(pages)} pages exceed the table's "
+                             f"max_pages={max_pages}")
+        table_row = np.zeros((max_pages,), np.int32)
+        table_row[:len(pages)] = pages
+        fn = self._get_exec("assign_row", _shape_key(cache),
+                            self._jit_assign_row)
+        return fn(cache, jnp.asarray(row, jnp.int32),
+                  jnp.asarray(table_row),
+                  jnp.asarray(start_len, jnp.int32))
+
+    def _jit_extend(self):
+        donate = (1,) if self.donate_cache else ()
+
+        def _extend(params, cache, row, tokens):
+            return self.model.extend_row(self.run, params, cache, row,
+                                         tokens)
+        return jax.jit(_extend, donate_argnums=donate)
+
+    def extend_row(self, params, cache, row, tokens
+                   ) -> Tuple[jax.Array, Any]:
+        """Chunked prefill-with-history of one paged row: ONE dispatch
+        whether the row is cold (length 0, tokens = full prompt) or warm
+        (length = shared-prefix length, tokens = the divergent suffix —
+        the prefix pages are READ, not recomputed). The row's pages must
+        already be installed (:meth:`assign_row_pages`). tokens: (1, L);
+        returns (last-token logits (1, V), updated cache)."""
+        tokens = jnp.asarray(tokens)
+        s = tokens.shape[1]
+        cap = cache.page_table.shape[1] * cache.page_size
+        if s > cap:
+            raise ValueError(
+                f"{s}-token chunk exceeds the row capacity of {cap} "
+                f"({cache.page_table.shape[1]} pages × "
+                f"{cache.page_size})")
+        fn = self._get_exec("extend_row",
+                            (_shape_key(cache), _shape_key(tokens)),
+                            self._jit_extend)
+        return fn(params, cache, jnp.asarray(row, jnp.int32), tokens)
+
+    def _jit_cow(self):
+        donate = (0,) if self.donate_cache else ()
+
+        def _cow(cache, src, dst):
+            def copy(pool):
+                page = jax.lax.dynamic_index_in_dim(pool, src, 1,
+                                                    keepdims=True)
+                return jax.lax.dynamic_update_slice_in_dim(pool, page, dst,
+                                                           1)
+            return dataclasses.replace(
+                cache, layers=jax.tree.map(copy, cache.layers))
+        return jax.jit(_cow, donate_argnums=donate)
+
+    def cow_copy_page(self, cache, src: int, dst: int):
+        """Copy physical page ``src`` → ``dst`` in every layer's K and V
+        pool — the device half of the allocator's copy-on-write barrier
+        (``PageAllocator.writable_page`` decides WHEN; the caller then
+        reinstalls the row's repointed table). Traced scalars: one
+        executable per cache bucket."""
+        fn = self._get_exec("cow_copy", _shape_key(cache), self._jit_cow)
+        return fn(cache, jnp.asarray(src, jnp.int32),
+                  jnp.asarray(dst, jnp.int32))
+
+    def _jit_fork(self):
+        donate = (0,) if self.donate_cache else ()
+
+        def _fork(cache, src, dst):
+            trow = jax.lax.dynamic_index_in_dim(cache.page_table, src, 0,
+                                                keepdims=True)
+            table = jax.lax.dynamic_update_slice_in_dim(
+                cache.page_table, trow, dst, 0)
+            lrow = jax.lax.dynamic_index_in_dim(cache.lengths, src, 0,
+                                                keepdims=True)
+            lengths = jax.lax.dynamic_update_slice_in_dim(
+                cache.lengths, lrow, dst, 0)
+            return dataclasses.replace(cache, page_table=table,
+                                       lengths=lengths)
+        return jax.jit(_fork, donate_argnums=donate)
+
+    def fork_row(self, cache, src: int, dst: int):
+        """Duplicate row ``src``'s page table and length into ``dst``
+        WITHOUT copying any KV (best-of-N decoding: N rows continue from
+        one prefill). Pair with ``PageAllocator.fork`` — the shared
+        partial tail page is COW'd on the first divergent write."""
+        fn = self._get_exec("fork_row", _shape_key(cache), self._jit_fork)
+        return fn(cache, jnp.asarray(src, jnp.int32),
+                  jnp.asarray(dst, jnp.int32))
 
     # ------------------------------------------------------------------
     # Generation

@@ -5,7 +5,9 @@ import numpy as np
 import pytest
 
 from repro.kernels.decode_attention import (decode_attention,
-                                            decode_attention_ref)
+                                            decode_attention_ref,
+                                            gather_pages,
+                                            paged_decode_attention)
 
 CASES = [
     # (b, t, h, kv, d, length, window, cap, block_t)
@@ -75,6 +77,89 @@ def test_ragged_scalar_broadcast_equivalence():
     b = decode_attention(q, kc, vc, jnp.full((3,), 77, jnp.int32),
                          block_t=64, interpret=True)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Paged kernel: page-table indirection == dense ragged kernel
+# ---------------------------------------------------------------------------
+
+PAGED_CASES = [
+    # (b, pages_total, page_size, max_pages, h, kv, d, window, cap)
+    (3, 32, 64, 4, 8, 2, 64, None, None),
+    (2, 24, 64, 6, 4, 4, 32, None, 30.0),
+    (4, 40, 128, 3, 8, 2, 64, 96, None),
+]
+
+
+def _paged_setup(case, seed=0):
+    b, p, ps, pmax, h, kv, d, window, cap = case
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, h, d))
+    k_pages = jax.random.normal(ks[1], (p, ps, kv, d))
+    v_pages = jax.random.normal(ks[2], (p, ps, kv, d))
+    # distinct random physical pages per row (page 0 left as null)
+    perm = np.random.default_rng(seed).permutation(np.arange(1, p))
+    table = jnp.asarray(perm[:b * pmax].reshape(b, pmax), jnp.int32)
+    return q, k_pages, v_pages, table
+
+
+@pytest.mark.parametrize("case", PAGED_CASES, ids=[str(c) for c in PAGED_CASES])
+def test_paged_matches_dense_ragged(case):
+    """The paged kernel reading KV tiles THROUGH the page table equals the
+    dense ragged kernel over the gathered per-row view — at mixed
+    lengths including 0 and S_max - 1."""
+    b, p, ps, pmax, h, kv, d, window, cap = case
+    q, k_pages, v_pages, table = _paged_setup(case)
+    smax = pmax * ps
+    base = [0, smax - 1, smax // 2, 17, 1]
+    lens = jnp.asarray(base[:b], jnp.int32)
+    out = paged_decode_attention(q, k_pages, v_pages, lens, table,
+                                 window=window, softcap=cap, interpret=True)
+    k_dense = gather_pages(k_pages, table)
+    v_dense = gather_pages(v_pages, table)
+    ref = decode_attention(q, k_dense, v_dense, lens, window=window,
+                           softcap=cap, block_t=ps, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+    oracle = decode_attention_ref(q, k_dense, v_dense, lens, window=window,
+                                  softcap=cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_shared_page_rows_agree():
+    """Two rows whose tables alias the SAME physical prefix page compute
+    identical attention over that span — the property prefix sharing
+    relies on (one physical copy serving N rows)."""
+    p, ps, pmax, h, kv, d = 16, 64, 2, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q1 = jax.random.normal(ks[0], (1, h, d))
+    k_pages = jax.random.normal(ks[1], (p, ps, kv, d))
+    v_pages = jax.random.normal(ks[2], (p, ps, kv, d))
+    q = jnp.concatenate([q1, q1], 0)
+    # rows share logical page 0 (physical 5), differ on page 1 — but at
+    # length < ps only the shared page is visible, so outputs must match
+    table = jnp.asarray([[5, 7], [5, 9]], jnp.int32)
+    lens = jnp.full((2,), ps - 1, jnp.int32)
+    out = paged_decode_attention(q, k_pages, v_pages, lens, table,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(out[1]),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_paged_small_pool_uses_reference():
+    """Pools below the kernel's 64-position floor fall back to the
+    gather reference (same rule as the dense wrapper)."""
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 16))
+    k_pages = jax.random.normal(jax.random.PRNGKey(1), (6, 4, 2, 16))
+    v_pages = jax.random.normal(jax.random.PRNGKey(2), (6, 4, 2, 16))
+    table = jnp.asarray([[1, 2], [3, 4]], jnp.int32)
+    lens = jnp.asarray([3, 7], jnp.int32)
+    out = paged_decode_attention(q, k_pages, v_pages, lens, table)
+    ref = decode_attention_ref(q, gather_pages(k_pages, table),
+                               gather_pages(v_pages, table), lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-6, rtol=1e-6)
 
 
 def test_length_sweep():

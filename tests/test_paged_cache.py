@@ -1,0 +1,339 @@
+"""Paged KV cache serving stack: allocator + engine + batcher.
+
+Token-parity against the dense shared-cache path is the load-bearing
+check: the paged batcher must be OBSERVATIONALLY identical to the dense
+one (same greedy tokens for every request across admit/evict churn) —
+pages, prefix sharing, and copy-on-write are pure memory-layout
+optimizations. On top of that: warm-prefix admission actually shares
+pages across COMPLETED requests, fork + COW isolates divergent
+continuations, the compile-count stays flat under churn at exactly one
+decode dispatch per round, and pool exhaustion requeues instead of
+killing the round. Plus the bugfix-sweep regressions (falsy max_len,
+reject-not-raise admission, expired-in-flight accounting).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import RunConfig, build
+from repro.router import ArrivalQueue, QueueConfig
+from repro.serving import (ContinuousBatcher, Engine, PageAllocator,
+                           PagesExhausted, Request)
+
+PS = 8  # small pages so tiny prompts span several
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = configs.smoke("qwen2-7b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompt(rng, n):
+    return rng.integers(0, 250, size=(n,)).astype(np.int32)
+
+
+def _run_batcher(model, params, reqs, **kw):
+    eng = Engine(model, RunConfig(cache_pad=16))
+    b = ContinuousBatcher(eng, params, **kw)
+    for r in reqs:
+        b.submit(r)
+    b.run()
+    return b, eng
+
+
+# ---------------------------------------------------------------------------
+# Paged == dense (observational equivalence)
+# ---------------------------------------------------------------------------
+
+
+def test_paged_matches_dense_tokens_under_churn(small_lm, rng):
+    """6 mixed-length requests through 3 slots: the paged batcher emits
+    exactly the dense batcher's greedy tokens, request by request."""
+    _, model, params = small_lm
+    prompts = [_prompt(rng, n) for n in (5, 11, 3, 17, 8, 13)]
+
+    def reqs():
+        return [Request(rid=i, prompt=p, max_new_tokens=4)
+                for i, p in enumerate(prompts)]
+
+    dense, _ = _run_batcher(model, params, reqs(), n_slots=3, max_len=48)
+    paged, _ = _run_batcher(model, params, reqs(), n_slots=3, max_len=48,
+                            paged=True, page_size=PS)
+    assert paged.paged, "paged mode silently fell back"
+    d = {r.rid: r.generated for r in dense.scheduler.completed}
+    p = {r.rid: r.generated for r in paged.scheduler.completed}
+    assert p == d and len(p) == 6
+
+
+def test_paged_falls_back_to_dense_under_mesh(small_lm):
+    """Documented seq-shard fallback: a mesh-aware engine keeps the
+    dense shared cache even when paged=True is requested."""
+    _, model, params = small_lm
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    eng = Engine(model, RunConfig(cache_pad=16), mesh=mesh)
+    b = ContinuousBatcher(eng, eng.shard_params(params), paged=True)
+    assert not b.paged
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing (warm cache across completed requests)
+# ---------------------------------------------------------------------------
+
+
+def test_warm_prefix_shared_across_completed_requests(small_lm, rng):
+    """Request B arrives AFTER request A (same 2-page prefix) completed:
+    B's admission matches A's registered pages out of the reclaim pool
+    (n_shared == 2) and still produces the dense-path tokens."""
+    _, model, params = small_lm
+    prefix = _prompt(rng, 2 * PS)
+    tail_a, tail_b = _prompt(rng, 4), _prompt(rng, 4)
+    pa = np.concatenate([prefix, tail_a])
+    pb = np.concatenate([prefix, tail_b])
+
+    eng = Engine(model, RunConfig(cache_pad=16))
+    b = ContinuousBatcher(eng, params, n_slots=2, max_len=40, paged=True,
+                          page_size=PS)
+    b.submit(Request(rid=0, prompt=pa, max_new_tokens=2))
+    b.run()
+
+    plans = []
+    real_admit = b.allocator.admit
+    b.allocator.admit = lambda *a, **k: (plans.append(real_admit(*a, **k))
+                                         or plans[-1])
+    b.submit(Request(rid=1, prompt=pb, max_new_tokens=2))
+    b.run()
+
+    assert [p.n_shared for p in plans] == [2]
+    assert plans[0].start_len == 2 * PS
+    assert len(plans[0].suffix) == 4
+    ref = eng.generate(params, pb[None], max_new_tokens=2)
+    done = {r.rid: r.generated for r in b.scheduler.completed}
+    assert done[1] == list(np.asarray(ref[0, len(pb):]))
+
+
+def test_concurrent_rows_alias_prefix_pages(small_lm, rng):
+    """Two LIVE rows with a common prompt prefix hold the same physical
+    pages at refcount 2 — one copy in HBM, not two."""
+    _, model, params = small_lm
+    prefix = _prompt(rng, 2 * PS)
+    pa = np.concatenate([prefix, _prompt(rng, 3)])
+    pb = np.concatenate([prefix, _prompt(rng, 5)])
+    eng = Engine(model, RunConfig(cache_pad=16))
+    b = ContinuousBatcher(eng, params, n_slots=2, max_len=40, paged=True,
+                          page_size=PS)
+    b.submit(Request(rid=0, prompt=pa, max_new_tokens=8))
+    b.submit(Request(rid=1, prompt=pb, max_new_tokens=8))
+    b.step()  # both admitted, neither done yet
+    alloc = b.allocator
+    shared = set(alloc.rows[0]) & set(alloc.rows[1])
+    assert len(shared) == 2
+    assert all(alloc.refcount(p) == 2 for p in shared)
+    b.run()
+    assert len(b.scheduler.completed) == 2
+
+
+# ---------------------------------------------------------------------------
+# fork + copy-on-write
+# ---------------------------------------------------------------------------
+
+
+def test_fork_cow_divergence_matches_independent_decodes(small_lm, rng):
+    """Best-of-N: fork row 0 into row 1 at zero copy cost, force
+    different first tokens, and decode both in the SAME ragged
+    dispatches. The COW barrier must fire on the shared partial tail
+    page, and each row's continuation must equal the unforked
+    single-request answer."""
+    _, model, params = small_lm
+    prompt = _prompt(rng, PS + 4)          # 1 full page + partial tail
+    steps = 4
+    eng = Engine(model, RunConfig(cache_pad=16))
+    alloc = PageAllocator(n_pages=9, page_size=PS, max_pages=3)
+    cache = eng.new_paged_cache(2, 9, PS, 3)
+
+    plan = alloc.admit(0, prompt, steps + 1)
+    cache = eng.assign_row_pages(cache, 0, plan.pages, plan.start_len)
+    logits, cache = eng.extend_row(params, cache, 0, plan.suffix[None])
+    t0 = int(np.argmax(np.asarray(logits[0])))
+    t1 = (t0 + 1) % 250                    # forced divergent branch
+
+    alloc.fork(0, 1)
+    cache = eng.fork_row(cache, 0, 1)
+    assert alloc.rows[0] == alloc.rows[1]
+    host_len = {0: len(prompt), 1: len(prompt)}
+    toks = np.array([[t0], [t1]], np.int32)
+    out = {0: [t0], 1: [t1]}
+    cow_fired = 0
+    for _ in range(steps):
+        for row in (0, 1):
+            cow = alloc.writable_page(row, host_len[row])
+            if cow is not None:
+                cow_fired += 1
+                cache = eng.cow_copy_page(cache, *cow)
+                cache = eng.assign_row_pages(cache, row, alloc.rows[row],
+                                             host_len[row])
+        logits, cache = eng.decode(params, cache, toks)
+        nxt = np.asarray(np.argmax(np.asarray(logits), axis=-1), np.int32)
+        for row in (0, 1):
+            out[row].append(int(nxt[row]))
+            host_len[row] += 1
+        toks = nxt[:, None]
+
+    assert cow_fired == 1                  # exactly one tail-page split
+    assert alloc.rows[0][1] != alloc.rows[1][1]  # tails diverged
+    assert alloc.rows[0][0] == alloc.rows[1][0]  # full page still shared
+    # each branch == the answer with no fork involved at all
+    ref0 = eng.generate(params, prompt[None], max_new_tokens=steps + 1)
+    assert out[0] == list(np.asarray(ref0[0, len(prompt):]))
+    forced = np.concatenate([prompt, [t1]]).astype(np.int32)
+    ref1 = eng.generate(params, forced[None], max_new_tokens=steps)
+    assert out[1][1:] == list(np.asarray(ref1[0, len(forced):]))
+
+
+# ---------------------------------------------------------------------------
+# Compilation + dispatch accounting
+# ---------------------------------------------------------------------------
+
+
+def test_compile_count_flat_and_one_dispatch_per_round(small_lm, rng):
+    """Admit/evict churn reuses executables: a second wave with the same
+    request shapes adds ZERO compiles, and every scheduling round with
+    active slots costs exactly one decode dispatch."""
+    _, model, params = small_lm
+    lens = (6, 10, 14)
+
+    def wave(base):
+        return [Request(rid=base + i, prompt=_prompt(rng, n),
+                        max_new_tokens=3) for i, n in enumerate(lens)]
+
+    eng = Engine(model, RunConfig(cache_pad=16))
+    b = ContinuousBatcher(eng, params, n_slots=3, max_len=32, paged=True,
+                          page_size=PS)
+    for r in wave(0):
+        b.submit(r)
+    b.run()
+    warm, rounds0, disp0 = eng.compile_count, b.rounds, b.decode_dispatches
+    assert disp0 == rounds0
+    for r in wave(10):
+        b.submit(r)
+    b.run()
+    assert eng.compile_count == warm
+    assert b.decode_dispatches - disp0 == b.rounds - rounds0
+    assert len(b.scheduler.completed) == 6
+
+
+# ---------------------------------------------------------------------------
+# Pool exhaustion: transient -> requeue, permanent -> reject
+# ---------------------------------------------------------------------------
+
+
+def test_pages_exhausted_requeues_and_drains(small_lm, rng):
+    """A pool sized for ONE row at a time: the second request waits at
+    the queue front while the first holds every page, then runs to
+    completion once the pages come back. No exception escapes step()."""
+    _, model, params = small_lm
+    reqs = [Request(rid=i, prompt=_prompt(rng, 12), max_new_tokens=3)
+            for i in range(2)]
+    eng = Engine(model, RunConfig(cache_pad=16))
+    b = ContinuousBatcher(eng, params, n_slots=2, max_len=16, paged=True,
+                          page_size=PS, n_pages=1 + 2)  # null + one row's 2
+    for r in reqs:
+        b.submit(r)
+    b.run()
+    assert sorted(r.rid for r in b.scheduler.completed) == [0, 1]
+    assert b.take_rejected() == []
+
+
+def test_paged_oversized_request_rejected_round_survives(small_lm, rng):
+    """A request that can NEVER fit a row is rejected at admission while
+    the concurrently-admitted request still completes (satellite of the
+    dense-path fix, on the paged path)."""
+    _, model, params = small_lm
+    ok = Request(rid=0, prompt=_prompt(rng, 6), max_new_tokens=2)
+    huge = Request(rid=1, prompt=_prompt(rng, 30), max_new_tokens=20)
+    eng = Engine(model, RunConfig(cache_pad=16))
+    b = ContinuousBatcher(eng, params, n_slots=2, max_len=24, paged=True,
+                          page_size=PS)
+    b.submit(ok)
+    b.submit(huge)
+    b.run()
+    assert [r.rid for r in b.scheduler.completed] == [0]
+    assert [r.rid for r in b.take_rejected()] == [1]
+
+
+# ---------------------------------------------------------------------------
+# Bugfix sweep regressions
+# ---------------------------------------------------------------------------
+
+
+def test_engine_rejects_falsy_and_undersized_max_len(small_lm):
+    """max_len=0 used to silently fall through ``max_len or default`` and
+    re-derive a default; now every non-positive or too-small capacity is
+    a loud ValueError at the API boundary."""
+    _, model, params = small_lm
+    eng = Engine(model, RunConfig(cache_pad=16))
+    toks = np.ones((1, 8), np.int32)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.prefill(params, toks, max_len=0)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.prefill(params, toks, max_len=4)  # prompt is 8 tokens
+    with pytest.raises(ValueError):
+        eng.new_cache(0, 32)
+    with pytest.raises(ValueError):
+        eng.new_cache(2, 0)
+    with pytest.raises(ValueError):
+        eng.new_paged_cache(2, 0, PS, 2)
+    # and the None path still sizes prompt + cache_pad
+    logits, cache = eng.prefill(params, toks, max_len=None)
+    assert cache.layers[0]["k"].shape[2] == 8 + 16
+
+
+def test_dense_late_long_prompt_rejected_not_raised(small_lm, rng):
+    """The longest prompt arriving AFTER the shared cache is sized used
+    to raise out of step() and kill the whole round. Now: rejected at
+    admission; every other slot completes untouched."""
+    _, model, params = small_lm
+    eng = Engine(model, RunConfig(cache_pad=8))
+    b = ContinuousBatcher(eng, params, n_slots=2)
+    b.submit(Request(rid=0, prompt=_prompt(rng, 6), max_new_tokens=4))
+    b.step()  # cache sized off the 6-token prompt: max_len = 14
+    b.submit(Request(rid=1, prompt=_prompt(rng, 40), max_new_tokens=4))
+    b.submit(Request(rid=2, prompt=_prompt(rng, 5), max_new_tokens=4))
+    b.run()
+    assert sorted(r.rid for r in b.scheduler.completed) == [0, 2]
+    assert [r.rid for r in b.take_rejected()] == [1]
+
+
+def test_requeue_expired_in_flight_counted_exactly_once():
+    """A request whose deadline passed WHILE in flight on a crashed
+    replica lands in ``expired`` exactly once: no retry tick, no
+    n_requeued tick, never popped again."""
+    q = ArrivalQueue(QueueConfig(drop_expired=True))
+    dead = Request(rid=0, prompt=np.ones(4, np.int32), max_new_tokens=2,
+                   arrival_t=0.0, deadline_s=1.0,
+                   generated=[7], n_retries=0)
+    alive = Request(rid=1, prompt=np.ones(4, np.int32), max_new_tokens=2,
+                    arrival_t=9.5, deadline_s=10.0, generated=[8])
+    n = q.requeue([dead, alive], now=10.0)
+    assert n == 1 and q.n_requeued == 1
+    assert q.expired == [dead]
+    assert dead.n_retries == 0 and dead.generated == [7]  # no reset
+    assert alive.n_retries == 1 and alive.generated == []  # reset+retried
+    assert q.pop(10.0) is alive
+    assert q.pop(10.0) is None
+    assert q.expired == [dead]  # still exactly once
+
+
+def test_requeue_without_now_keeps_legacy_semantics():
+    """Callers that don't know the crash time keep the old behavior:
+    everything is reset and requeued; ``pop`` does the expiring."""
+    q = ArrivalQueue(QueueConfig(drop_expired=True))
+    r = Request(rid=0, prompt=np.ones(4, np.int32), max_new_tokens=2,
+                arrival_t=0.0, deadline_s=1.0)
+    assert q.requeue([r]) == 1
+    assert q.pop(99.0) is None  # expired on the way out
+    assert q.expired == [r]

@@ -255,3 +255,122 @@ def test_calibration_recovers_and_is_nonnegative(overhead, per_item,
     assert abs(cal.round_overhead_s - overhead) < 1e-7
     assert abs(cal.per_item_s - per_item) < 1e-7
     assert cal.rmse_s < 1e-7
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache: PageAllocator laws
+# ---------------------------------------------------------------------------
+
+from collections import Counter  # noqa: E402
+
+from repro.serving.paged import PageAllocator, PagesExhausted  # noqa: E402
+
+
+def _check_allocator_laws(alloc: PageAllocator):
+    """The conservation/ownership invariants every op sequence preserves:
+
+    * page 0 (null) is never owned, never free-listed, never reclaimable;
+    * every physical page 1..n-1 is in EXACTLY one of {live, free list,
+      reclaim pool} — nothing leaks, nothing double-books;
+    * refcount(p) == number of rows holding p (and 0 off-row);
+    * a row's pages are distinct (one physical page per logical page).
+    """
+    held = Counter(p for pages in alloc.rows.values() for p in pages)
+    assert 0 not in held
+    assert 0 not in alloc.free_list and 0 not in alloc.reclaimable
+    for pages in alloc.rows.values():
+        assert len(set(pages)) == len(pages)
+    live, free = set(held), set(alloc.free_list)
+    rec = set(alloc.reclaimable)
+    assert len(free) == len(alloc.free_list)      # free list has no dupes
+    assert not (live & free) and not (live & rec) and not (free & rec)
+    assert live | free | rec == set(range(1, alloc.n_pages))
+    for p in range(alloc.n_pages):
+        assert alloc.refcounts[p] == held.get(p, 0)
+    assert alloc.n_free == len(free) + len(rec)
+    assert alloc.n_live == len(live)
+
+
+@given(data=st.data())
+@settings(deadline=None, max_examples=60)
+def test_page_allocator_laws_hold_under_any_op_sequence(data):
+    """admit / free / fork / writable_page in any interleaving keep the
+    conservation + refcount laws; failures (PagesExhausted, over-long
+    requests, occupied rows) must leave state untouched too."""
+    n_pages = data.draw(st.integers(3, 24), label="n_pages")
+    ps = data.draw(st.integers(1, 4), label="page_size")
+    max_pages = data.draw(st.integers(1, 6), label="max_pages")
+    alloc = PageAllocator(n_pages, ps, max_pages)
+    _check_allocator_laws(alloc)
+    next_row = 0
+    for _ in range(data.draw(st.integers(1, 25), label="n_ops")):
+        rows = sorted(alloc.rows)
+        op = data.draw(st.sampled_from(
+            ["admit", "free", "fork", "cow"] if rows else ["admit"]))
+        if op == "admit":
+            plen = data.draw(st.integers(1, max_pages * ps + 2))
+            mnt = data.draw(st.integers(0, 3))
+            prompt = data.draw(st.lists(st.integers(0, 2), min_size=plen,
+                                        max_size=plen))
+            try:
+                plan = alloc.admit(next_row, prompt, mnt)
+                assert len(plan.suffix) > 0     # last token never matched
+                assert plan.start_len == plan.n_shared * ps
+                next_row += 1
+            except (PagesExhausted, ValueError):
+                pass
+        elif op == "free":
+            row = data.draw(st.sampled_from(rows))
+            before = alloc.n_free
+            freed = alloc.free(row)
+            assert alloc.n_free == before + len(freed)
+        elif op == "fork":
+            src = data.draw(st.sampled_from(rows))
+            try:
+                assert alloc.fork(src, next_row) == alloc.rows[src]
+                next_row += 1
+            except ValueError:
+                pass
+        elif op == "cow":
+            row = data.draw(st.sampled_from(rows))
+            span = len(alloc.rows[row]) * ps
+            pos = data.draw(st.integers(0, span - 1))
+            try:
+                alloc.writable_page(row, pos)
+                # post-condition: the write target is exclusively owned
+                assert alloc.refcounts[
+                    alloc.rows[row][pos // ps]] == 1
+            except PagesExhausted:
+                pass
+        _check_allocator_laws(alloc)
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       lens=st.lists(st.integers(0, 127), min_size=1, max_size=3))
+@settings(deadline=None, max_examples=8)
+def test_paged_kernel_parity_random_lengths(seed, lens):
+    """Interpret-mode paged kernel == dense ragged kernel over the
+    gathered view at ARBITRARY per-row lengths (hypothesis picks them;
+    0 and S_max-1 are reachable draws)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.decode_attention import (decode_attention,
+                                                gather_pages,
+                                                paged_decode_attention)
+
+    b, p, ps, pmax, h, kv, d = len(lens), 12, 64, 2, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, h, d))
+    k_pages = jax.random.normal(ks[1], (p, ps, kv, d))
+    v_pages = jax.random.normal(ks[2], (p, ps, kv, d))
+    perm = np.random.default_rng(seed).permutation(np.arange(1, p))
+    table = jnp.asarray(perm[:b * pmax].reshape(b, pmax), jnp.int32)
+    lengths = jnp.asarray(lens, jnp.int32)
+    out = paged_decode_attention(q, k_pages, v_pages, lengths, table,
+                                 interpret=True)
+    ref = decode_attention(q, gather_pages(k_pages, table),
+                           gather_pages(v_pages, table), lengths,
+                           block_t=ps, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)

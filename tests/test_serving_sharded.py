@@ -131,7 +131,8 @@ def test_batcher_one_dispatch_per_round_flat_compiles(small_lm):
 def test_batched_heterogeneous_prompts_and_capacity(small_lm):
     """The shared cache sizes to the longest prompt visible at first
     admission (shorter-first submission order included), and a request
-    that can't fit raises loudly instead of silently overflowing."""
+    that can't fit is REJECTED at admission — not silently overflowed,
+    and not raised out of step() (which used to kill the whole round)."""
     cfg, model, params = small_lm
     engine = Engine(model, RunConfig(cache_pad=24))
     batcher = ContinuousBatcher(engine, params, n_slots=2)
@@ -152,8 +153,10 @@ def test_batched_heterogeneous_prompts_and_capacity(small_lm):
     tight = ContinuousBatcher(engine, params, n_slots=1, max_len=16)
     tight.submit(Request(9, rng.integers(0, cfg.vocab_size, 10),
                          max_new_tokens=12))
-    with pytest.raises(ValueError, match="shared cache holds 16"):
-        tight.run()
+    tight.run()
+    assert not tight.scheduler.completed
+    assert [r.rid for r in tight.take_rejected()] == [9]
+    assert tight.take_rejected() == []  # drained exactly once
 
 
 def test_batched_matches_per_slot_tokens(small_lm):
