@@ -1,0 +1,230 @@
+"""Event-driven front-door benchmark: MEASURED serving latencies +
+the sync/event parity proof, recorded as BENCH_7.json.
+
+Two halves, one record:
+
+  * HTTP streaming (wall clock) — a stdlib-asyncio ``HttpFrontDoor``
+    over an ``EventRouter(clock=WallClock())`` serves concurrent
+    streaming clients on this host. TTFT/TPOT here are REAL
+    timestamps taken at first-token/per-token events as rounds commit
+    them — not modeled round boundaries — which is the number the
+    paper's latency claims are about. The ``derived`` column carries
+    p50/p99 TTFT and p50 TPOT in milliseconds of actual wall time.
+  * Parity (virtual clock) — the same traffic trace driven through
+    ``Router.run()`` (synchronous rounds) and
+    ``EventRouter.run_events()`` (event queue) must produce identical
+    report summaries and per-request token streams, with exactly one
+    decode dispatch per scheduling round on every replica. The claims
+    block records the verdict per traffic shape; CI greps it.
+
+See tests/test_event_router.py for the pinned versions of both claims.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import time
+
+import jax
+
+from repro import configs
+from repro.core import LatencyModel
+from repro.models import RunConfig, build
+from repro.router import (EventRouter, HttpFrontDoor, QueueDepthPolicy,
+                          ReplicaConfig, ReplicaPool, Router, TRAFFIC,
+                          WallClock, make_requests, percentile)
+from repro.serving import Engine
+
+BENCH_RECORD = "BENCH_7.json"
+
+N_CLIENTS = 8
+MAX_NEW = 8
+PROMPT_LEN = 16
+N_SLOTS = 4
+RATE_RPS = 24.0
+HORIZON_S = 4.0
+PER_TOKEN_S = 0.02
+COLD_START_S = 0.5
+SEED = 0
+
+LAST_RUN: dict = {}
+
+
+def _replica_cfg():
+    return ReplicaConfig(n_slots=N_SLOTS,
+                         max_len=PROMPT_LEN + MAX_NEW + 8)
+
+
+async def _client(port: int, i: int) -> list:
+    """One streaming HTTP client; returns its decoded NDJSON chunks."""
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    body = json.dumps({"prompt": [1 + (i % 7)] * PROMPT_LEN,
+                       "max_new_tokens": MAX_NEW})
+    writer.write((f"POST /v1/generate HTTP/1.1\r\nHost: b\r\n"
+                  f"Content-Length: {len(body)}\r\n\r\n{body}").encode())
+    await writer.drain()
+    await reader.readline()                      # status
+    while (await reader.readline()) not in (b"\r\n", b"\n"):
+        pass
+    chunks = []
+    while True:
+        size = int((await reader.readline()).strip() or b"0", 16)
+        if size == 0:
+            break
+        chunks.append(json.loads(await reader.readexactly(size)))
+        await reader.readexactly(2)
+    writer.close()
+    return chunks
+
+
+def _http_measured(engine, params) -> tuple:
+    """Serve N_CLIENTS concurrent streams over HTTP on the wall clock;
+    returns (report, host_seconds)."""
+    async def main():
+        pool = ReplicaPool(engine, params, _replica_cfg(),
+                           lat=LatencyModel(cold_start_s=0.01,
+                                            per_item_s=None))
+        router = EventRouter(pool, QueueDepthPolicy(max_replicas=2),
+                             clock=WallClock(), traffic_name="http")
+        door = HttpFrontDoor(router, port=0)
+        await door.start()
+        streams = await asyncio.gather(
+            *(_client(door.port, i) for i in range(N_CLIENTS)))
+        await door.close()
+        assert all(c[-1].get("event") == "end" and c[-1]["done"]
+                   for c in streams)
+        return router.report()
+
+    t0 = time.perf_counter()
+    report = asyncio.run(main())
+    return report, time.perf_counter() - t0
+
+
+def _parity(engine, params, cfg, traffic_name: str) -> tuple:
+    """Run the trace through both drivers; returns (verdict dict,
+    event-path report, host_seconds)."""
+    lat = LatencyModel(cold_start_s=COLD_START_S, per_item_s=PER_TOKEN_S)
+    arrivals = TRAFFIC[traffic_name](RATE_RPS, HORIZON_S, SEED)
+
+    def build_router(cls):
+        reqs = make_requests(arrivals, prompt_len=PROMPT_LEN,
+                             max_new_tokens=MAX_NEW,
+                             vocab=cfg.vocab_size, seed=SEED)
+        pool = ReplicaPool(engine, params, _replica_cfg(), lat=lat)
+        return cls(pool, QueueDepthPolicy(max_replicas=4), reqs,
+                   traffic_name=traffic_name)
+
+    sync = build_router(Router)
+    rep_s = sync.run()
+    event = build_router(EventRouter)
+    t0 = time.perf_counter()
+    rep_e = event.run_events()
+    host_s = time.perf_counter() - t0
+
+    def streams(router):
+        return {r.rid: (list(r.generated), r.first_token_t, r.finish_t)
+                for r in router.completed}
+
+    dispatches = sum(r.batcher.decode_dispatches
+                     for router in (sync, event)
+                     for r in router.pool.replicas)
+    rounds = sum(r.batcher.rounds for router in (sync, event)
+                 for r in router.pool.replicas)
+    verdict = {
+        "n_requests": int(arrivals.size),
+        "summaries_equal": rep_s.summary() == rep_e.summary(),
+        "streams_equal": streams(sync) == streams(event),
+        "decode_dispatches_per_round": round(
+            dispatches / max(rounds, 1), 4),
+    }
+    return verdict, rep_e, host_s
+
+
+def bench() -> list:
+    cfg = configs.smoke("qwen2-7b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(SEED))
+    engine = Engine(model, RunConfig(cache_pad=16))
+
+    rows = []
+
+    # 1. measured HTTP serving (the wall-clock half)
+    http_report, http_host_s = _http_measured(engine, params)
+    rows.append((
+        f"event_router/http_stream_{N_CLIENTS}c",
+        http_host_s * 1e6 / max(http_report.tokens_out, 1),
+        f"{http_report.tokens_per_s:.0f} tok/s"
+        f" p50TTFT {percentile(http_report.ttft_s, 50) * 1e3:.0f}ms"
+        f" p99TTFT {percentile(http_report.ttft_s, 99) * 1e3:.0f}ms"
+        f" p50TPOT {percentile(http_report.tpot_s, 50) * 1e3:.1f}ms"
+        f" measured"))
+
+    # 2. the parity proof per traffic shape (the virtual-clock half)
+    parity = {}
+    for traffic_name in ("poisson", "bursty", "diurnal"):
+        verdict, rep_e, host_s = _parity(engine, params, cfg, traffic_name)
+        parity[traffic_name] = verdict
+        ok = verdict["summaries_equal"] and verdict["streams_equal"]
+        rows.append((
+            f"event_router/parity_{traffic_name}",
+            host_s * 1e6 / max(rep_e.tokens_out, 1),
+            f"parity {'OK' if ok else 'FAIL'}"
+            f" {verdict['n_requests']} reqs"
+            f" dispatch/round {verdict['decode_dispatches_per_round']:.2f}"
+            f" p99TTFT {percentile(rep_e.ttft_s, 99) * 1e3:.0f}ms"))
+
+    LAST_RUN.clear()
+    LAST_RUN.update({
+        "claims": {
+            "http_n_clients": N_CLIENTS,
+            "http_time_model": http_report.time_model,
+            "measured_ttft_p50_s": round(
+                percentile(http_report.ttft_s, 50), 4),
+            "measured_ttft_p99_s": round(
+                percentile(http_report.ttft_s, 99), 4),
+            "measured_tpot_p50_s": round(
+                percentile(http_report.tpot_s, 50), 4),
+            "http_n_completed": http_report.n_completed,
+            "http_n_cancelled": http_report.n_cancelled,
+            "parity": parity,
+            "parity_all_equal": all(
+                v["summaries_equal"] and v["streams_equal"]
+                for v in parity.values()),
+            "one_decode_dispatch_per_round": all(
+                v["decode_dispatches_per_round"] == 1.0
+                for v in parity.values()),
+        },
+        "http_summary": http_report.summary(),
+    })
+    return rows
+
+
+def record(rows: list) -> dict:
+    return {
+        "benchmark": "event_router_bench",
+        "device_count": jax.device_count(),
+        "backend": jax.default_backend(),
+        "config": {"n_clients": N_CLIENTS, "prompt_len": PROMPT_LEN,
+                   "max_new_tokens": MAX_NEW, "n_slots": N_SLOTS,
+                   "rate_rps": RATE_RPS, "horizon_s": HORIZON_S,
+                   "per_token_s": PER_TOKEN_S,
+                   "cold_start_s": COLD_START_S, "seed": SEED},
+        "rows": [{"name": n, "us_per_call": round(us, 2), "derived": d}
+                 for n, us, d in rows],
+        "http_summary": LAST_RUN.get("http_summary", {}),
+        "claims": LAST_RUN.get("claims", {}),
+    }
+
+
+if __name__ == "__main__":
+    import sys
+    out_rows = bench()
+    for name, us, derived in out_rows:
+        print(f"{name},{us:.2f},{derived}")
+    claims = LAST_RUN.get("claims", {})
+    if claims:
+        print(f"# claims: {json.dumps(claims)}", file=sys.stderr)
+    if len(sys.argv) > 1:
+        with open(sys.argv[1], "w") as f:
+            json.dump(record(out_rows), f, indent=2)
+            f.write("\n")

@@ -1,18 +1,25 @@
 """Online request router: serverless elasticity over the serving stack.
 
 The layer that puts LIVE traffic on the batched engines: an arrival
-queue with admission control, a replica pool (each replica = one
-``ContinuousBatcher(batched=True)``, over one shared ``Engine`` or —
-``mesh_slices`` mode — its own ``Engine`` on a disjoint mesh slice)
-with cold starts and fault-injected crashes, pluggable autoscaling
-policies, TTFT/TPOT/goodput/cost metrics, and a measured round-time
-calibration (``calibrate.py``). See router/README.md and
-docs/COST_MODEL.md.
+queue with admission control and priority classes, a replica pool
+(each replica = one ``ContinuousBatcher(batched=True)`` — dense or
+block-paged — over one shared ``Engine`` or — ``mesh_slices`` mode —
+its own ``Engine`` on a disjoint mesh slice) with cold starts and
+fault-injected crashes, pluggable autoscaling policies,
+TTFT/TPOT/goodput/cost metrics, and a measured round-time calibration
+(``calibrate.py``). Two drivers share one event core (``events.py``):
+the synchronous-round virtual-clock ``Router`` (deterministic harness)
+and the event-driven ``EventRouter`` + ``HttpFrontDoor``
+(``frontdoor.py`` — live asyncio serving with streamed tokens). See
+router/README.md and docs/COST_MODEL.md.
 """
 from repro.router.calibrate import (CalibratedLatencyModel,  # noqa: F401
                                     RoundSample, fit_round_model,
                                     measure_round_samples,
                                     samples_from_bench)
+from repro.router.events import (EventQueue, RouterCore,  # noqa: F401
+                                 VirtualClock, WallClock)
+from repro.router.frontdoor import EventRouter, HttpFrontDoor  # noqa: F401
 from repro.router.metrics import (RouterReport, billing,  # noqa: F401
                                   percentile, request_latencies)
 from repro.router.policy import (AutoscalePolicy, CostCapPolicy,  # noqa: F401

@@ -1,9 +1,14 @@
 """Online-serving metrics: TTFT/TPOT/goodput/utilization and cost.
 
-All times are virtual-clock seconds (see router.py's time model):
+All times are clock seconds — virtual under the deterministic harness,
+real under the wall-clock event loop (see router/events.py):
 
   * TTFT — ``first_token_t - arrival_t``: queue wait + cold starts +
-    prefill. The metric autoscaling policies move.
+    prefill. The metric autoscaling policies move. Stamped by
+    ``record_first_token`` at the FIRST-TOKEN EVENT (the prefill that
+    produced it, mid-round), exactly once per request — never at the
+    round boundary, and never re-stamped when a crash-requeued request
+    re-earns its first token (the client already saw the original).
   * TPOT — ``(finish_t - first_token_t) / (n_tokens - 1)``: steady
     decode cadence; policy-insensitive unless replicas are overloaded.
   * goodput — completed-within-deadline / submitted. Rejected (queue
@@ -64,6 +69,7 @@ class RouterReport:
     time_model: str = "modeled"     # measured | modeled | calibrated
     n_slices: Optional[int] = None  # mesh-slice pool capacity (None =
     #                                 shared-engine mode)
+    n_cancelled: int = 0            # client disconnects (event loop)
 
     @property
     def tokens_per_s(self) -> float:
@@ -85,6 +91,7 @@ class RouterReport:
             "n_rejected": self.n_rejected,
             "n_expired": self.n_expired,
             "n_requeued": self.n_requeued,
+            "n_cancelled": self.n_cancelled,
             "n_crashes": self.n_crashes,
             "n_spawns": self.n_spawns,
             "peak_replicas": self.peak_replicas,
@@ -125,6 +132,22 @@ class RouterReport:
                 f" | peak {self.peak_replicas}"
                 f" | ${self.cost_usd:.6f} (${self.cost_per_1k_tokens:.5f}"
                 f"/1k-tok)")
+
+
+def record_first_token(req: Request, t: float) -> bool:
+    """Stamp TTFT at the first-token EVENT, exactly once.
+
+    Returns True when this call recorded the stamp. False means the
+    request already had one — a crash-requeued request keeps its
+    original ``first_token_t`` through ``reset_for_retry`` (the client
+    saw that token on the stream), so the re-serve's prefill event must
+    NOT move it. Centralizing the stamp here is what keeps "exactly
+    once" true across the sync-round and event-loop drivers.
+    """
+    if req.first_token_t is not None:
+        return False
+    req.first_token_t = t
+    return True
 
 
 def request_latencies(completed: List[Request]

@@ -131,12 +131,21 @@ class SlicePool:
 class ReplicaConfig:
     """Shape of one replica. ``max_len`` is fixed up front so every
     replica allocates the identical cache bucket (flat compile_count);
-    it must cover ``prompt_len + max_new_tokens`` for every request."""
+    it must cover ``prompt_len + max_new_tokens`` for every request.
+
+    ``paged=True`` gives every replica a block-paged KV cache
+    (``ContinuousBatcher(paged=True)`` — page pools, prefix sharing,
+    COW; see serving/README.md). Single-host batched mode only: with a
+    mesh the batcher falls back to the dense shared cache, exactly as
+    documented there."""
 
     n_slots: int = 4
     max_len: int = 64
     ram_mb: float = 848.0        # the paper's Lambda sizing
     chips_per_replica: int = 1   # TPU-analogue chip-seconds accounting
+    paged: bool = False          # block-paged KV cache per replica
+    page_size: int = 16
+    n_pages: Optional[int] = None  # physical pool size; None = worst case
 
 
 class Replica:
@@ -247,7 +256,10 @@ class ReplicaPool:
             engine, params = self.slices.engine_for(slice_idx)
         batcher = ContinuousBatcher(engine, params,
                                     n_slots=self.cfg.n_slots,
-                                    max_len=self.cfg.max_len, batched=True)
+                                    max_len=self.cfg.max_len, batched=True,
+                                    paged=self.cfg.paged,
+                                    page_size=self.cfg.page_size,
+                                    n_pages=self.cfg.n_pages)
         r = Replica(len(self.replicas), batcher, spawn_t=now,
                     ready_t=now + self.cold_start_s(), slice_idx=slice_idx)
         self.replicas.append(r)

@@ -1,4 +1,4 @@
-"""The online router: arrivals → admission → replicas → autoscaling.
+"""The synchronous-round router: the deterministic test/bench harness.
 
 Drives live traffic onto the batched serving stack with the same
 discipline as ``core/orchestrator.py``: REAL inference on this host
@@ -6,6 +6,12 @@ discipline as ``core/orchestrator.py``: REAL inference on this host
 ``Engine``), while the schedule itself — queue waits, cold starts,
 concurrent replicas, crashes — is evaluated on a deterministic virtual
 clock, so a 8-replica bursty scenario reproduces faithfully on one CPU.
+
+All the mechanics live in ``router/events.py``'s ``RouterCore`` — the
+"one event core" both this driver and the event-driven ``EventRouter``
+(``router/frontdoor.py``) share, which is what makes the two paths
+provably equivalent (the parity suite in tests/test_event_router.py).
+This class contributes only the synchronous-round loop:
 
 Time model (one round = one ``ContinuousBatcher.step`` per replica;
 full derivation in docs/COST_MODEL.md):
@@ -39,233 +45,24 @@ crashed round's work is lost — its in-flight requests (including any
 that "finished" during the doomed round) are reset and re-queued at the
 queue front, the dead replica is billed to the crash point, and the
 policy replaces it with a fresh cold start on the next round.
+
+TTFT is stamped at the FIRST-TOKEN EVENT (the admission prefill that
+produced it, mid-round), exactly once per request — see
+``RouterCore._step_replica`` and ``metrics.record_first_token``.
 """
 from __future__ import annotations
 
-import dataclasses
-from collections import deque
-from typing import Any, List, Optional, Sequence
-
-from repro.core.cost_model import AWSPriceBook, TPUPriceBook
-from repro.router.metrics import RouterReport, billing, request_latencies
-from repro.router.policy import AutoscalePolicy, PoolSnapshot
-from repro.router.pool import ReplicaPool
-from repro.router.queue import ArrivalQueue, QueueConfig
-from repro.serving.batching import Request
+from repro.router.events import (RouterConfig,  # noqa: F401  (re-export)
+                                 RouterCore)
+from repro.router.metrics import RouterReport
 
 
-_DEFAULT_PREFILL_FACTOR = 0.125
-_DEFAULT_ROUND_OVERHEAD_S = 0.0
-
-
-@dataclasses.dataclass(frozen=True)
-class RouterConfig:
-    """Round-time knobs. Two ways to drive the modeled clock:
-
-      * hand-set — ``round_overhead_s``/``prefill_token_factor`` here
-        plus ``LatencyModel.per_item_s`` on the pool (the serial
-        token-work model; the ``0.0`` overhead default keeps busy
-        seconds exactly work-conserving across policies);
-      * calibrated — ``calibration=CalibratedLatencyModel`` carries all
-        three constants, fitted from measured serving rows by
-        ``router/calibrate.py``.
-
-    Supplying BOTH raises ``ValueError`` here (hand-set round params)
-    or in ``Router`` (a pool ``per_item_s``): silent disagreement
-    between a fitted artifact and hand-set numbers is exactly the bug
-    calibration exists to remove.
-    """
-
-    prefill_token_factor: float = _DEFAULT_PREFILL_FACTOR
-    round_overhead_s: float = _DEFAULT_ROUND_OVERHEAD_S
-    rate_window_s: float = 4.0           # arrival/throughput estimators
-    idle_step_s: float = 0.05            # clock floor when nothing runs
-    max_rounds: int = 200_000
-    calibration: Optional[Any] = None    # CalibratedLatencyModel
-
-    def __post_init__(self):
-        if self.calibration is None:
-            return
-        if (self.round_overhead_s != _DEFAULT_ROUND_OVERHEAD_S
-                or self.prefill_token_factor != _DEFAULT_PREFILL_FACTOR):
-            raise ValueError(
-                "RouterConfig got BOTH a calibration artifact and "
-                "hand-set round_overhead_s/prefill_token_factor — the "
-                "calibration supplies those; drop the hand-set values "
-                "or the calibration")
-
-
-class Router:
-    """One policy × one traffic trace → a fully-accounted RouterReport."""
-
-    def __init__(self, pool: ReplicaPool, policy: AutoscalePolicy,
-                 traffic: Sequence[Request],
-                 queue_cfg: QueueConfig = QueueConfig(),
-                 cfg: RouterConfig = RouterConfig(),
-                 aws: AWSPriceBook = AWSPriceBook(),
-                 tpu: TPUPriceBook = TPUPriceBook(),
-                 traffic_name: str = ""):
-        self.pool = pool
-        self.policy = policy
-        self.queue = ArrivalQueue(queue_cfg)
-        self.cfg = cfg
-        self.aws = aws
-        self.tpu = tpu
-        self.traffic_name = traffic_name
-        # resolve the round-time mode ONCE (see the module docstring):
-        # calibrated > modeled (hand-set per_item_s) > measured.
-        cal = cfg.calibration
-        if cal is not None:
-            if pool.lat.per_item_s is not None:
-                raise ValueError(
-                    "both RouterConfig.calibration and a hand-set "
-                    "LatencyModel.per_item_s were supplied — the "
-                    "calibration carries per_item_s; build the pool's "
-                    "LatencyModel via calibration.to_latency_model()")
-            self._overhead_s = cal.round_overhead_s
-            self._per_item_s = cal.per_item_s
-            self._prefill_factor = cal.prefill_token_factor
-            self.time_model = "calibrated"
-        else:
-            self._overhead_s = cfg.round_overhead_s
-            self._per_item_s = pool.lat.per_item_s
-            self._prefill_factor = cfg.prefill_token_factor
-            self.time_model = ("modeled" if pool.lat.per_item_s is not None
-                               else "measured")
-        for r in traffic:           # hand-built tests may omit arrival_t
-            if r.arrival_t is None:
-                r.arrival_t = 0.0
-        self._pending = deque(sorted(traffic, key=lambda r: r.arrival_t))
-        self._avg_request_tokens = (
-            sum(r.max_new_tokens
-                + len(r.prompt) * self._prefill_factor
-                for r in traffic) / max(len(traffic), 1))
-        self.completed: List[Request] = []
-        self.clock = 0.0
-        self.peak_replicas = 0
-        self._arrivals = deque()       # recent arrival times
-        self._tok_events = deque()     # (t, n) recent token production
-        self.events: List[dict] = []   # observability, orchestrator-style
-
-    # -- observability --------------------------------------------------
-
-    def _log(self, kind: str, **kw):
-        self.events.append({"t": round(self.clock, 4), "kind": kind, **kw})
-
-    # -- estimators / snapshot ------------------------------------------
-
-    def _rate_rps(self) -> float:
-        w = self.cfg.rate_window_s
-        while self._arrivals and self._arrivals[0] < self.clock - w:
-            self._arrivals.popleft()
-        return len(self._arrivals) / w
-
-    def _tokens_per_s(self) -> float:
-        w = self.cfg.rate_window_s
-        while self._tok_events and self._tok_events[0][0] < self.clock - w:
-            self._tok_events.popleft()
-        return sum(n for _, n in self._tok_events) / w
-
-    def _cost_so_far(self) -> float:
-        return billing(self.pool.busy_seconds(), len(self.completed),
-                       ram_mb=self.pool.cfg.ram_mb,
-                       chips_per_replica=self.pool.cfg.chips_per_replica,
-                       aws=self.aws, tpu=self.tpu)["cost_usd"]
-
-    def snapshot(self) -> PoolSnapshot:
-        pool = self.pool
-        live = pool.live()
-        return PoolSnapshot(
-            clock=self.clock,
-            queue_depth=self.queue.depth,
-            oldest_wait_s=self.queue.oldest_wait_s(self.clock),
-            n_ready=sum(1 for r in live if r.state == "ready"),
-            n_starting=sum(1 for r in live if r.state == "starting"),
-            n_draining=sum(1 for r in live if r.state == "draining"),
-            active_slots=sum(r.n_inflight for r in pool.ready()),
-            slots_per_replica=pool.cfg.n_slots,
-            arrival_rate_rps=self._rate_rps(),
-            tokens_per_s=self._tokens_per_s(),
-            avg_request_tokens=self._avg_request_tokens,
-            cost_usd=self._cost_so_far(),
-            slice_capacity=pool.capacity(),
-        )
-
-    # -- one replica round ----------------------------------------------
-
-    def _round_seconds(self, wall_s: float, n_prefill_tokens: int,
-                       n_active: int) -> float:
-        if self._per_item_s is None:      # measured mode
-            return self._overhead_s + wall_s
-        return (self._overhead_s
-                + self._per_item_s * (n_prefill_tokens
-                                      * self._prefill_factor + n_active))
-
-    def _step_replica(self, r) -> float:
-        """Run one round on replica ``r``; returns its virtual duration
-        (post fault perturbation). Handles crash rollback + re-queue."""
-        pre_inflight = r.inflight()
-        n_prefill_tokens = sum(len(q.prompt) for q in r.sched.queue)
-        pre_tokens = sum(len(q.generated) for q in pre_inflight)
-
-        wall_s = r.step()
-
-        round_s = self._round_seconds(wall_s, n_prefill_tokens,
-                                      len(pre_inflight))
-        round_s, crashed = self.pool.injector.perturb(
-            r.replica_id, r.rounds, round_s)
-        r.busy_s += round_s            # crashed rounds are billed too
-        done_now = r.drain_completed()
-
-        # a request the replica's cache can never hold is rejected at
-        # admission (the batcher keeps the round alive — see
-        # ContinuousBatcher); count it with the queue's rejections. This
-        # drains BEFORE the crash branch: a rejection stands even when
-        # the round that made it crashes (retrying it would just reject
-        # again — every replica shares the same cache capacity).
-        rejected_now = r.batcher.take_rejected()
-        for q in rejected_now:
-            self.queue.rejected.append(q)
-            self._log("reject", rid=q.rid, replica=r.replica_id,
-                      reason="capacity")
-
-        if crashed:
-            # the round's work is lost: everything that was in flight
-            # (or finished during the doomed round) restarts from scratch
-            # — except requests already past their deadline, which the
-            # queue counts as EXPIRED (once, not also retried), and
-            # requests the round REJECTED, which stay rejected
-            lost = [q for q in pre_inflight
-                    if not any(q is rj for rj in rejected_now)]
-            self.pool.crash(r, self.clock + round_s)
-            n_req = self.queue.requeue(lost, self.clock + round_s)
-            self._log("crash", replica=r.replica_id, requeued=n_req,
-                      expired=len(lost) - n_req)
-            return round_s
-
-        t_visible = self.clock + round_s
-        produced = (sum(len(q.generated) for q in r.inflight())
-                    + sum(len(q.generated) for q in done_now)
-                    - pre_tokens)
-        r.tokens_out += produced
-        if produced:
-            self._tok_events.append((t_visible, produced))
-        for q in r.inflight() + done_now:
-            if q.first_token_t is None and q.generated:
-                q.first_token_t = t_visible
-        for q in done_now:
-            q.finish_t = t_visible
-            self.completed.append(q)
-        return round_s
-
-    # -- the main loop --------------------------------------------------
-
-    def _done(self) -> bool:
-        return (not self._pending and self.queue.depth == 0
-                and all(r.n_inflight == 0 for r in self.pool.live()))
+class Router(RouterCore):
+    """One policy × one traffic trace → a fully-accounted RouterReport,
+    driven as synchronous rounds on the virtual clock."""
 
     def run(self) -> RouterReport:
-        pool, queue, cfg = self.pool, self.queue, self.cfg
+        pool, cfg = self.pool, self.cfg
         rounds = 0
         while True:
             rounds += 1
@@ -276,96 +73,29 @@ class Router:
             # 1. arrivals up to the current clock
             while (self._pending
                    and self._pending[0].arrival_t <= self.clock + 1e-12):
-                req = self._pending.popleft()
-                self._arrivals.append(req.arrival_t)
-                if not queue.submit(req, self.clock):
-                    self._log("reject", rid=req.rid)
+                self._admit_arrival(self._pending.popleft())
 
-            # 2. autoscale, then surface finished cold starts
-            target = self.policy.target(self.snapshot())
-            before = len(pool.live())
-            pool.scale_to(target, self.clock)
-            if len(pool.live()) != before:
-                self._log("scale", target=target,
-                          live=len(pool.live()))
-            pool.poll_ready(self.clock)
-            self.peak_replicas = max(self.peak_replicas, len(pool.live()))
+            # 2-3. autoscale, surface finished cold starts, dispatch
+            self._control()
 
-            # 3. dispatch queued requests into free slots
-            for r in pool.ready():
-                while r.free_slots > 0:
-                    req = queue.pop(self.clock)
-                    if req is None:
-                        break
-                    r.batcher.submit(req)
-
-            # 4. step every replica that has work — draining replicas
-            #    keep decoding until their last slot empties (concurrent
-            #    replicas: the clock advances by the slowest round)
-            durations = [
-                self._step_replica(r) for r in pool.live()
-                if r.state in ("ready", "draining") and r.n_inflight > 0]
+            # 4. step every replica that has work (concurrent replicas:
+            #    the clock advances by the slowest round)
+            durations = self._step_all()
 
             if durations:
                 # advance to the round boundary BEFORE retiring drained
                 # replicas: a replica finishing its last slot this round
                 # was provisioned through the round, so its busy seconds
                 # stay within its ready window (utilization <= 1)
-                self.clock += max(durations)
+                self._clock.advance_to(self.clock + max(durations))
                 pool.retire_drained(self.clock)
                 continue
 
             # 5. idle: jump to the next event (arrival or cold start)
-            if self._done():
+            if not self._pending and self._drained():
                 break
-            horizon = [r.ready_t for r in pool.live()
-                       if r.state == "starting"]
-            if self._pending:
-                horizon.append(self._pending[0].arrival_t)
-            self.clock = max(self.clock + 1e-9,
-                             min(horizon) if horizon
-                             else self.clock + cfg.idle_step_s)
+            self._idle_advance(self._pending[0].arrival_t
+                               if self._pending else None)
 
         pool.retire_all(self.clock)
         return self._report()
-
-    # -- final accounting -----------------------------------------------
-
-    def _report(self) -> RouterReport:
-        lats = request_latencies(self.completed)
-        n_sub = self.queue.n_submitted
-        good = sum(
-            1 for r in self.completed
-            if r.deadline_s is None
-            or (r.finish_t - r.arrival_t) <= r.deadline_s)
-        busy = self.pool.busy_seconds()
-        ready_s = sum(
-            max((r.retire_t if r.retire_t is not None else self.clock)
-                - r.ready_t, 0.0) for r in self.pool.replicas)
-        bill = billing(busy, len(self.completed),
-                       ram_mb=self.pool.cfg.ram_mb,
-                       chips_per_replica=self.pool.cfg.chips_per_replica,
-                       aws=self.aws, tpu=self.tpu)
-        return RouterReport(
-            policy=self.policy.name,
-            traffic=self.traffic_name,
-            wall_time_s=self.clock,
-            n_submitted=n_sub,
-            n_completed=len(self.completed),
-            n_rejected=len(self.queue.rejected),
-            n_expired=len(self.queue.expired),
-            n_requeued=self.queue.n_requeued,
-            n_crashes=self.pool.n_crashes,
-            n_spawns=self.pool.n_spawns,
-            peak_replicas=self.peak_replicas,
-            tokens_out=self.pool.tokens_out(),
-            ttft_s=lats["ttft"],
-            tpot_s=lats["tpot"],
-            goodput=good / max(n_sub, 1),
-            utilization=busy / max(ready_s, 1e-12),
-            busy_replica_s=busy,
-            provisioned_replica_s=self.pool.provisioned_seconds(self.clock),
-            time_model=self.time_model,
-            n_slices=self.pool.capacity(),
-            **bill,
-        )

@@ -58,6 +58,7 @@ class Request:
     first_token_t: Optional[float] = None   # first streamed token (TTFT)
     finish_t: Optional[float] = None        # last token committed
     n_retries: int = 0
+    priority: int = 0       # arrival-queue class: lower dispatches first
 
     def reset_for_retry(self):
         """Crash re-queue (the paper's retry semantics): in-flight work is
@@ -164,6 +165,17 @@ class ContinuousBatcher:
     batched mode collapses to 1/round), ``decode_steps`` = slot-steps of
     decode work (identical between modes for the same workload),
     ``rounds`` = scheduling rounds driven.
+
+    Streaming-callback contract: when ``on_token`` is set, every token
+    COMMIT calls ``on_token(req, token, prefill)`` — ``prefill=True``
+    exactly once per admission (the token the admission prefill
+    produced), ``False`` for decode-round tokens — in commit order,
+    AFTER the scheduler bookkeeping for that token (``req.done`` is
+    accurate). Free rows riding in the decode dispatch never fire it
+    (their sampled tokens are discarded). The router's event core
+    installs a fresh collector around each round; the batcher never
+    calls it for tokens it did not commit, so a caller that discards a
+    crashed round's events gets rollback for free.
     """
 
     engine: Engine
@@ -174,6 +186,7 @@ class ContinuousBatcher:
     paged: bool = False
     page_size: int = 16
     n_pages: Optional[int] = None   # physical pool size; default = worst case
+    on_token: Optional[Any] = None  # callback(req, token, prefill) per commit
 
     def __post_init__(self):
         self.scheduler = SlotScheduler(self.n_slots)
@@ -253,7 +266,7 @@ class ContinuousBatcher:
                 max_len=self.max_len)
             tok = int(jnp.argmax(logits[0]))
             self._tokens[slot, 0] = tok
-            self._commit_batched(slot, tok)
+            self._commit_batched(slot, tok, prefill=True)
         if not self.scheduler.active:
             return
         logits, self.cache = self.engine.decode(self.params, self.cache,
@@ -265,10 +278,13 @@ class ContinuousBatcher:
         for slot in list(self.scheduler.active):
             self._commit_batched(slot, int(toks[slot]))
 
-    def _commit_batched(self, slot: int, tok: int):
+    def _commit_batched(self, slot: int, tok: int, prefill: bool = False):
+        req = self.scheduler.slots[slot]
         self.scheduler.step_done(slot, tok)
         if self.scheduler.slots[slot] is None:  # completed -> free the row
             self.cache = self.engine.free_row(self.cache, slot)
+        if self.on_token is not None and req is not None:
+            self.on_token(req, tok, prefill)
 
     # -- paged: shared physical pool, prefix sharing, COW, 1 dispatch ---
 
@@ -321,7 +337,7 @@ class ContinuousBatcher:
             self._host_len[slot] = len(req.prompt)
             tok = int(jnp.argmax(logits[0]))
             self._tokens[slot, 0] = tok
-            self._commit_paged(slot, tok)
+            self._commit_paged(slot, tok, prefill=True)
         if not self.scheduler.active:
             return
         for slot in list(self.scheduler.active):
@@ -345,12 +361,15 @@ class ContinuousBatcher:
             self._host_len[slot] += 1
             self._commit_paged(slot, int(toks[slot]))
 
-    def _commit_paged(self, slot: int, tok: int):
+    def _commit_paged(self, slot: int, tok: int, prefill: bool = False):
+        req = self.scheduler.slots[slot]
         self.scheduler.step_done(slot, tok)
         if self.scheduler.slots[slot] is None:  # completed -> free pages
             self.allocator.free(slot)
             self._host_len.pop(slot, None)
             self.cache = self.engine.free_row(self.cache, slot)
+        if self.on_token is not None and req is not None:
+            self.on_token(req, tok, prefill)
 
     # -- legacy per-slot: one cache + one dispatch per active slot ------
 
@@ -362,7 +381,7 @@ class ContinuousBatcher:
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
             self.caches[slot] = cache
             self._last_tok[slot] = tok
-            self._commit_per_slot(slot, tok)
+            self._commit_per_slot(slot, tok, prefill=True)
         for slot in list(self.scheduler.active):
             logits, cache = self.engine.decode(
                 self.params, self.caches[slot], self._last_tok[slot])
@@ -373,11 +392,44 @@ class ContinuousBatcher:
             self._last_tok[slot] = tok
             self._commit_per_slot(slot, tok)
 
-    def _commit_per_slot(self, slot: int, tok):
+    def _commit_per_slot(self, slot: int, tok, prefill: bool = False):
+        req = self.scheduler.slots[slot]
         self.scheduler.step_done(slot, int(tok[0, 0]))
         if self.scheduler.slots[slot] is None:  # completed -> evict
             self.caches.pop(slot, None)
             self._last_tok.pop(slot, None)
+        if self.on_token is not None and req is not None:
+            self.on_token(req, int(tok[0, 0]), prefill)
+
+    # -- mid-flight cancellation (client disconnect) --------------------
+
+    def cancel(self, req: Request) -> bool:
+        """Evict ``req`` by IDENTITY: drop it from the slot queue, or
+        free its slot and cache row/pages. Called between rounds (the
+        event loop's disconnect path) — the current round, and every
+        other slot in it, is untouched. Returns True when found."""
+        for i, q in enumerate(self.scheduler.queue):
+            if q is req:
+                del self.scheduler.queue[i]
+                return True
+        for slot, q in enumerate(self.scheduler.slots):
+            if q is not req:
+                continue
+            self.scheduler.slots[slot] = None
+            if self.paged:
+                if self.allocator is not None:
+                    self.allocator.free(slot)
+                self._host_len.pop(slot, None)
+                if self.cache is not None:
+                    self.cache = self.engine.free_row(self.cache, slot)
+            elif self.batched:
+                if self.cache is not None:
+                    self.cache = self.engine.free_row(self.cache, slot)
+            else:
+                self.caches.pop(slot, None)
+                self._last_tok.pop(slot, None)
+            return True
+        return False
 
     def run(self, max_rounds: int = 10_000) -> List[Request]:
         """Drive rounds until every submitted request completes."""

@@ -19,8 +19,8 @@ from repro.core.job import TaskRecord, Chunk, InvokeOutcome
 from repro.data.pipeline import DatasetRef, chunk_ranges
 from repro.models.common import MoEConfig
 from repro.models.moe import capacity
-from repro.router import (ArrivalQueue, QueueConfig, RoundSample,
-                          bursty_arrivals, diurnal_arrivals,
+from repro.router import (ArrivalQueue, EventQueue, QueueConfig,
+                          RoundSample, bursty_arrivals, diurnal_arrivals,
                           fit_round_model, poisson_arrivals)
 from repro.serving.batching import Request
 
@@ -201,6 +201,89 @@ def test_queue_requeue_front_preserves_order(n, k):
         assert r.generated == [] or r.rid >= k
     assert order == list(range(n))
     assert q.n_requeued == k
+
+
+# ---------------------------------------------------------------------------
+# Router: event-loop laws (queue.py priority classes + exactly-once
+# expiry, events.py EventQueue ordering — tests/test_event_router.py
+# pins the deterministic cases)
+# ---------------------------------------------------------------------------
+
+
+@given(ts=st.lists(st.sampled_from([0.0, 0.25, 0.5, 1.0, 2.0]),
+                   min_size=1, max_size=40))
+def test_event_queue_pops_by_time_then_push_order(ts):
+    """The determinism anchor of the event-driven driver: events pop
+    ordered by (t, push order) — equal-time events keep FIFO order."""
+    eq = EventQueue()
+    for i, t in enumerate(ts):
+        eq.push(t, "e", i)
+    out = [eq.pop() for _ in range(len(ts))]
+    assert not eq and eq.peek_t() is None
+    expected = sorted(enumerate(ts), key=lambda p: (p[1], p[0]))
+    assert [(t, payload) for t, _, payload in out] == [
+        (t, i) for i, t in expected]
+
+
+@given(pris=st.lists(st.integers(0, 3), min_size=1, max_size=40))
+@settings(deadline=None, max_examples=40)
+def test_queue_fifo_within_priority_class(pris):
+    """Lower class numbers dispatch first; WITHIN a class, strict
+    submission order (== a stable sort by priority)."""
+    q = ArrivalQueue()
+    reqs = [Request(i, np.ones(2, np.int32), max_new_tokens=1, priority=p)
+            for i, p in enumerate(pris)]
+    for r in reqs:
+        q.submit(r, 0.0)
+    popped = []
+    while (r := q.pop(0.0)) is not None:
+        popped.append(r.rid)
+    assert popped == [r.rid for r in
+                      sorted(reqs, key=lambda r: r.priority)]
+
+
+@given(data=st.data())
+@settings(deadline=None, max_examples=50)
+def test_expiry_exactly_once_under_random_interleavings(data):
+    """Any interleaving of admit / pop / crash-requeue / clock-advance:
+    every admitted request ends in EXACTLY one terminal partition
+    (served or expired), the expired list never double-counts, and
+    requeue never resurrects a request that already expired."""
+    q = ArrivalQueue(QueueConfig(default_deadline_s=1.0))
+    now = 0.0
+    admitted, inflight = [], []
+    for _ in range(data.draw(st.integers(1, 40), label="n_ops")):
+        op = data.draw(st.sampled_from(["admit", "pop", "requeue",
+                                        "advance"]))
+        if op == "admit":
+            r = Request(len(admitted), np.ones(2, np.int32),
+                        max_new_tokens=1,
+                        priority=data.draw(st.integers(0, 2)))
+            q.submit(r, now)
+            admitted.append(r)
+        elif op == "pop":
+            r = q.pop(now)
+            if r is not None:
+                inflight.append(r)
+        elif op == "requeue" and inflight:
+            k = data.draw(st.integers(1, len(inflight)))
+            lost, inflight = inflight[:k], inflight[k:]
+            q.requeue(lost, now)
+        elif op == "advance":
+            now += data.draw(st.sampled_from([0.3, 0.7, 1.1]))
+    served = list(inflight)
+    while (r := q.pop(now)) is not None:
+        served.append(r)
+    assert q.depth == 0
+    exp_ids = [id(r) for r in q.expired]
+    assert len(exp_ids) == len(set(exp_ids))        # exactly-once
+    for r in q.expired:                              # never resurrected
+        assert all(s is not r for s in served)
+    # partition: served + expired is exactly the admitted set
+    assert sorted(map(id, served + q.expired)) == sorted(map(id, admitted))
+    # a served request really was within its deadline when dispatched
+    for r in served:
+        assert id(r) not in q._expired_ids
 
 
 # ---------------------------------------------------------------------------
