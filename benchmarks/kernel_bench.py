@@ -11,9 +11,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.decode_attention import decode_attention_ref
+from repro.kernels.decode_attention import (decode_attention_ref,
+                                            dequantize_kv, quantize_kv)
 from repro.kernels.flash_attention import flash_attention_ref
 from repro.models import attention as A
+from benchmarks.roofline import decode_kv_read_bytes
 
 
 def _time(fn, *args, n=5):
@@ -55,9 +57,23 @@ def bench() -> list:
     dec = jax.jit(lambda q, k, v: decode_attention_ref(
         q, k, v, jnp.int32(8000)))
     t_dec = _time(dec, qd, kc, vc)
-    bytes_read = 2 * 8 * 8192 * kv * d * 2
+    bytes_read = decode_kv_read_bytes(8, 8192, kv, d, "bf16")
     out.append(("kernel/decode_attn_kv8k", t_dec * 1e6,
                 f"{bytes_read/t_dec/1e9:.1f} GB/s host KV stream"))
+
+    # int8 KV variant: on-host this runs the dequantize+ref fallback
+    # (the Pallas quant kernel dequantizes in VMEM on TPU); the derived
+    # column reports the MODELED HBM bytes — the roofline win is the
+    # byte ratio, not host wall time.
+    kq, ks = quantize_kv(kc)
+    vq, vs = quantize_kv(vc)
+    dec8 = jax.jit(lambda q, k, ksc, v, vsc: decode_attention_ref(
+        q, dequantize_kv(k, ksc), dequantize_kv(v, vsc), jnp.int32(8000)))
+    t_dec8 = _time(dec8, qd, kq, ks, vq, vs)
+    bytes8 = decode_kv_read_bytes(8, 8192, kv, d, "int8")
+    out.append(("kernel/decode_attn_kv8k_int8", t_dec8 * 1e6,
+                f"kv_bytes={bytes8/2**20:.1f}MiB "
+                f"({bytes8/bytes_read:.2f}x bf16)"))
     return out
 
 

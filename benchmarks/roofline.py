@@ -2,6 +2,15 @@
 
 Per (arch × shape × mesh): the three per-chip terms (compute / memory /
 collective, seconds), dominant bottleneck, MODEL_FLOPS ratio, HBM fit.
+
+Also the KV-cache byte model shared by the kernel and profiling
+benchmarks: flash decode is memory-bound (every round streams the whole
+live cache), so its roofline term is exactly ``decode_kv_read_bytes``.
+The model is parameterized by KV dtype — ``int8`` stores each token's
+K/V rows as int8 plus one fp32 per-token-per-kv-head scale
+(``repro.kernels.decode_attention.quant``), which is the "KV bytes per
+token halved" BENCH_8 claim: at head_dim 64 the ratio vs bf16 is
+(64 + 4) / (2 * 64) ≈ 0.53.
 """
 from __future__ import annotations
 
@@ -10,6 +19,24 @@ import json
 import os
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+# per-element KV bytes and per-token-per-kv-head scale overhead by dtype
+KV_BYTES = {"bf16": 2, "int8": 1}
+SCALE_BYTES = {"bf16": 0, "int8": 4}  # one fp32 scale per token per kv head
+
+
+def kv_token_bytes(kv_heads: int, head_dim: int,
+                   kv_dtype: str = "bf16") -> int:
+    """HBM bytes ONE cached token costs (K plane + V plane + scales)."""
+    return 2 * kv_heads * (KV_BYTES[kv_dtype] * head_dim
+                           + SCALE_BYTES[kv_dtype])
+
+
+def decode_kv_read_bytes(batch: int, seq: int, kv_heads: int, head_dim: int,
+                         kv_dtype: str = "bf16") -> int:
+    """Bytes one ragged flash-decode round streams from HBM — the
+    memory-roofline term of the decode hot loop."""
+    return batch * seq * kv_token_bytes(kv_heads, head_dim, kv_dtype)
 
 
 def load(pattern: str = "*.json"):

@@ -1,6 +1,11 @@
+from repro.kernels.decode_attention.fused_sampling import (  # noqa: F401
+    apply_filters, fused_sample, fused_sample_kernel, nucleus_cutoff)
 from repro.kernels.decode_attention.ops import (decode_attention,  # noqa: F401
                                                 decode_attention_partials,
                                                 paged_decode_attention)
+from repro.kernels.decode_attention.quant import (KV_DTYPES,  # noqa: F401
+                                                  dequantize_kv,
+                                                  kv_dtype_of, quantize_kv)
 from repro.kernels.decode_attention.ref import (decode_attention_partials_ref,  # noqa: F401
                                                 decode_attention_ref,
                                                 gather_pages,

@@ -42,16 +42,25 @@ NEG_INF = -1e30
 
 def _tile_update(q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr, *,
                  ti, upper, lower, scale: float, block_t: int, group: int,
-                 softcap: Optional[float]):
+                 softcap: Optional[float], k_scale_ref=None,
+                 v_scale_ref=None):
     """One online-softmax step over the current (block_t, D) KV tile.
 
     Columns attend iff ``lower < col <= upper`` (global positions are the
     caller's concern — it folds any shard offset into the bounds).
     Updates the (m, l, acc) VMEM scratch in place.
+
+    ``k_scale_ref``/``v_scale_ref`` (int8 KV mode) carry the per-token
+    quantization scale column for this tile — (1, block_t, 1, 1) fp32 —
+    and the int8 KV tile is dequantized HERE, in VMEM, so the kernel's
+    HBM traffic stays the int8 bytes (the halved-bandwidth win).
     """
     q = q_ref[0, :, 0, :].astype(jnp.float32)  # (group, D)
     k = k_ref[0, :, 0, :].astype(jnp.float32)  # (block_t, D)
     v = v_ref[0, :, 0, :].astype(jnp.float32)
+    if k_scale_ref is not None:
+        k = k * k_scale_ref[0, :, 0, :]        # (block_t, 1) broadcast
+        v = v * v_scale_ref[0, :, 0, :]
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
@@ -138,6 +147,40 @@ def _kernel_partials(bounds_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         l_ref[...] = l_scr[...].reshape(l_ref.shape)
 
 
+def _kernel_quant(len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale: float, block_t: int,
+                  n_t: int, group: int, window: Optional[int],
+                  softcap: Optional[float]):
+    """int8-KV variant of ``_kernel``: same tile loop and mask math, with
+    the per-token scale columns riding beside the KV tiles and the
+    dequantize fused into ``_tile_update`` (int8 bytes over HBM, fp32
+    math in VMEM)."""
+    bi = pl.program_id(0)
+    ti = pl.program_id(2)
+    length = len_ref[bi]
+    lower = length - window if window is not None else jnp.int32(-2 ** 30)
+    _init_scratch(m_scr, l_scr, acc_scr, ti)
+    _tile_update(q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr, ti=ti,
+                 upper=length, lower=lower, scale=scale, block_t=block_t,
+                 group=group, softcap=softcap, k_scale_ref=ks_ref,
+                 v_scale_ref=vs_ref)
+
+    @pl.when(ti == n_t - 1)
+    def _done():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, :, 0, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def _kernel_paged_quant(len_ref, table_ref, q_ref, k_ref, v_ref, ks_ref,
+                        vs_ref, o_ref, m_scr, l_scr, acc_scr, **kw):
+    """Paged int8 variant: page-table indirection in the index map (as in
+    ``_kernel_paged``), per-page scale columns DMA'd beside the pages."""
+    del table_ref
+    _kernel_quant(len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+                  m_scr, l_scr, acc_scr, **kw)
+
+
 def _kernel_paged(len_ref, table_ref, q_ref, k_ref, v_ref, o_ref, m_scr,
                   l_scr, acc_scr, **kw):
     """Paged variant of ``_kernel``: identical tile loop and mask math.
@@ -205,6 +248,67 @@ def decode_attention_kernel(q, k_cache, v_cache, lengths, *,
         interpret=interpret,
         name="decode_attention",
     )(jnp.asarray(lengths, jnp.int32), qg, k_cache, v_cache)
+    return out.transpose(0, 2, 1, 3).reshape(b, h, d)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "block_t", "interpret"))
+def decode_attention_quant_kernel(q, k_cache, v_cache, k_scale, v_scale,
+                                  lengths, *, window: Optional[int] = None,
+                                  softcap: Optional[float] = None,
+                                  block_t: int = 512,
+                                  interpret: bool = False):
+    """int8-KV flash decode. q: (B,H,D) fp; caches: (B,T,KV,D) int8;
+    scales: (B,T,KV,1) fp32 (per-token-per-kv-head); lengths: (B,) int32.
+    Same grid/index-map/early-exit structure as ``decode_attention_kernel``
+    — the scale columns use the SAME clamped KV index map, so a short
+    row's HBM traffic stays ~lengths[b] of int8 bytes + scales."""
+    b, h, d = q.shape
+    t, kv = k_cache.shape[1], k_cache.shape[2]
+    group = h // kv
+    n_t = t // block_t
+    scale = 1.0 / (d ** 0.5)
+
+    qg = q.reshape(b, kv, group, d).transpose(0, 2, 1, 3)  # (B, group, KV, D)
+
+    kernel = functools.partial(
+        _kernel_quant, scale=scale, block_t=block_t, n_t=n_t, group=group,
+        window=window, softcap=softcap)
+
+    def kv_map(bi, ki, ti, lens):
+        return (bi, _clamp_tile(ti, lens[bi], block_t), ki, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kv, n_t),
+        in_specs=[
+            pl.BlockSpec((1, group, 1, d),
+                         lambda bi, ki, ti, lens: (bi, 0, ki, 0)),
+            pl.BlockSpec((1, block_t, 1, d), kv_map),
+            pl.BlockSpec((1, block_t, 1, d), kv_map),
+            pl.BlockSpec((1, block_t, 1, 1), kv_map),
+            pl.BlockSpec((1, block_t, 1, 1), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, group, 1, d),
+                               lambda bi, ki, ti, lens: (bi, 0, ki, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, group, kv, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="decode_attention_int8_kv",
+    )(jnp.asarray(lengths, jnp.int32), qg, k_cache, v_cache, k_scale,
+      v_scale)
     return out.transpose(0, 2, 1, 3).reshape(b, h, d)
 
 
@@ -345,4 +449,65 @@ def paged_decode_attention_kernel(q, k_pages, v_pages, lengths, page_table,
         name="paged_decode_attention",
     )(jnp.asarray(lengths, jnp.int32), jnp.asarray(page_table, jnp.int32),
       qg, k_pages, v_pages)
+    return out.transpose(0, 2, 1, 3).reshape(b, h, d)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "interpret"))
+def paged_decode_attention_quant_kernel(q, k_pages, v_pages, k_scale,
+                                        v_scale, lengths, page_table, *,
+                                        window: Optional[int] = None,
+                                        softcap: Optional[float] = None,
+                                        interpret: bool = False):
+    """int8-KV paged flash decode. q: (B,H,D); pools: (P, ps, KV, D)
+    int8; scale pools: (P, ps, KV, 1) fp32 — each physical page carries
+    its own per-token scale rows, so the scale DMA routes through the
+    SAME scalar-prefetched page table (and COW page copies / shared
+    prefix pages move scales with their data for free)."""
+    b, h, d = q.shape
+    ps, kv = k_pages.shape[1], k_pages.shape[2]
+    n_t = page_table.shape[1]
+    group = h // kv
+    scale = 1.0 / (d ** 0.5)
+
+    qg = q.reshape(b, kv, group, d).transpose(0, 2, 1, 3)  # (B, group, KV, D)
+
+    kernel = functools.partial(
+        _kernel_paged_quant, scale=scale, block_t=ps, n_t=n_t, group=group,
+        window=window, softcap=softcap)
+
+    def kv_map(bi, ki, ti, lens, table):
+        return (table[bi, _clamp_tile(ti, lens[bi], ps)], 0, ki, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kv, n_t),
+        in_specs=[
+            pl.BlockSpec((1, group, 1, d),
+                         lambda bi, ki, ti, lens, table: (bi, 0, ki, 0)),
+            pl.BlockSpec((1, ps, 1, d), kv_map),
+            pl.BlockSpec((1, ps, 1, d), kv_map),
+            pl.BlockSpec((1, ps, 1, 1), kv_map),
+            pl.BlockSpec((1, ps, 1, 1), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, group, 1, d),
+                               lambda bi, ki, ti, lens, table:
+                               (bi, 0, ki, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, group, kv, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="paged_decode_attention_int8_kv",
+    )(jnp.asarray(lengths, jnp.int32), jnp.asarray(page_table, jnp.int32),
+      qg, k_pages, v_pages, k_scale, v_scale)
     return out.transpose(0, 2, 1, 3).reshape(b, h, d)

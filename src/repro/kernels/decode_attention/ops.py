@@ -22,7 +22,9 @@ import jax.numpy as jnp
 
 from repro.kernels.decode_attention.decode_attention import (
     decode_attention_kernel, decode_attention_partials_kernel,
-    paged_decode_attention_kernel)
+    decode_attention_quant_kernel, paged_decode_attention_kernel,
+    paged_decode_attention_quant_kernel)
+from repro.kernels.decode_attention.quant import dequantize_kv
 from repro.kernels.decode_attention.ref import (_row_lengths,
                                                 decode_attention_partials_ref,
                                                 decode_attention_ref,
@@ -30,6 +32,7 @@ from repro.kernels.decode_attention.ref import (_row_lengths,
 
 
 def decode_attention(q, k_cache, v_cache, lengths, *,
+                     k_scale=None, v_scale=None,
                      window: Optional[int] = None,
                      softcap: Optional[float] = None,
                      block_t: int = 512,
@@ -37,13 +40,21 @@ def decode_attention(q, k_cache, v_cache, lengths, *,
     """q: (B,H,D); caches: (B,T,KV,D); lengths: () or (B,) int32.
 
     Returns (B,H,D); row b attends kv positions <= lengths[b].
+
+    ``k_scale``/``v_scale`` (both (B,T,KV,1) fp32, or both None) mark the
+    caches as int8 with per-token quantization scales; the quant kernel
+    variant dequantizes tiles in VMEM so HBM traffic stays int8.
     """
     b, h, d = q.shape
     t = k_cache.shape[1]
     lengths = _row_lengths(lengths, b)
+    quant = k_scale is not None
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if t < 64:
+        if quant:
+            k_cache = dequantize_kv(k_cache, k_scale)
+            v_cache = dequantize_kv(v_cache, v_scale)
         return decode_attention_ref(q, k_cache, v_cache, lengths,
                                     window=window, softcap=softcap)
     block_t = min(block_t, t)
@@ -52,13 +63,21 @@ def decode_attention(q, k_cache, v_cache, lengths, *,
         widths = ((0, 0), (0, pad), (0, 0), (0, 0))
         k_cache = jnp.pad(k_cache, widths)
         v_cache = jnp.pad(v_cache, widths)
+        if quant:
+            k_scale = jnp.pad(k_scale, widths)
+            v_scale = jnp.pad(v_scale, widths)
         # padded tail is masked in-kernel via `lengths` (< t always)
+    if quant:
+        return decode_attention_quant_kernel(
+            q, k_cache, v_cache, k_scale, v_scale, lengths, window=window,
+            softcap=softcap, block_t=block_t, interpret=interpret)
     return decode_attention_kernel(
         q, k_cache, v_cache, lengths, window=window, softcap=softcap,
         block_t=block_t, interpret=interpret)
 
 
 def paged_decode_attention(q, k_pages, v_pages, lengths, page_table, *,
+                           k_scale=None, v_scale=None,
                            window: Optional[int] = None,
                            softcap: Optional[float] = None,
                            interpret: Optional[bool] = None):
@@ -69,18 +88,30 @@ def paged_decode_attention(q, k_pages, v_pages, lengths, page_table, *,
     j <= lengths[b]; its logical page i resolves to physical page
     ``page_table[b, i]`` in the shared pool. Returns (B,H,D).
 
+    ``k_scale``/``v_scale`` (both (P, page_size, KV, 1) fp32 pools, or
+    both None) mark the pools as int8 with per-token scales; the scale
+    pages route through the same page-table indirection as the data.
+
     Small pools (total logical extent < 64) take the gather reference —
     the same tiny-cache fallback rule as the dense wrapper.
     """
     b = q.shape[0]
     lengths = _row_lengths(lengths, b)
     page_table = jnp.asarray(page_table, jnp.int32)
+    quant = k_scale is not None
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if k_pages.shape[1] * page_table.shape[1] < 64:
+        if quant:
+            k_pages = dequantize_kv(k_pages, k_scale)
+            v_pages = dequantize_kv(v_pages, v_scale)
         return paged_decode_attention_ref(q, k_pages, v_pages, lengths,
                                           page_table, window=window,
                                           softcap=softcap)
+    if quant:
+        return paged_decode_attention_quant_kernel(
+            q, k_pages, v_pages, k_scale, v_scale, lengths, page_table,
+            window=window, softcap=softcap, interpret=interpret)
     return paged_decode_attention_kernel(
         q, k_pages, v_pages, lengths, page_table, window=window,
         softcap=softcap, interpret=interpret)

@@ -1,0 +1,63 @@
+"""int8 KV-cache quantization: symmetric per-token-per-kv-head scales.
+
+KV bandwidth is the roofline-limiting term of flash decode
+(``benchmarks/roofline.py``): every round streams the whole live cache.
+Storing K/V as int8 with an fp32 scale per cached token per kv head cuts
+the per-token KV bytes to ``(head_dim + 4) / (2 * head_dim)`` of bf16 —
+~0.53x at head_dim 64 (the "halved KV bandwidth" row in BENCH_8). The
+scales ride ALONGSIDE the cache in the same layout family as the data:
+
+  * dense ``Cache``   — kv leaf (G, B, Smax, KV, hd) int8,
+                        scale leaf (G, B, Smax, KV, 1) fp32
+  * ``PagedCache``    — kv pool (G, P, ps, KV, hd) int8,
+                        scale pool (G, P, ps, KV, 1) fp32 (per-page
+                        scales at token granularity: each physical
+                        page carries its own scale rows, so COW page
+                        copies and prefix sharing move scales with data)
+
+Scale granularity is ONE TOKEN (not a multi-token block): the decode hot
+loop appends exactly one token per row per round, and a per-token scale
+keeps that write O(1) — a coarser block scale would need a read-modify-
+max over the block on every append. Dequantization happens IN-KERNEL
+(``_kernel_quant`` / ``_kernel_paged_quant`` multiply the int8 tile by
+its scale column in VMEM), so HBM traffic is the int8 bytes.
+
+Error bound (tested): symmetric round-to-nearest at
+``scale = max|x| / 127`` gives ``|x - deq(x)| <= scale / 2`` per
+element, hence per attention logit
+``|dlogit| <= (||q_row||_1 * max_scale_k / 2) / sqrt(d)`` plus the
+matching V term after softmax — small enough that greedy decode matches
+bf16 except at fp near-ties (documented in BENCH_8, the PR-3 precedent).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+KV_DTYPES = ("bf16", "int8")
+
+SCALE_EPS = 1e-8  # all-zero tokens quantize to scale eps, not a NaN
+
+
+def quantize_kv(x):
+    """x (..., hd) -> (int8 values (..., hd), fp32 scales (..., 1)).
+
+    Symmetric round-to-nearest over the trailing head_dim axis:
+    ``scale = max|x| / 127`` (clamped at ``SCALE_EPS``),
+    ``q = clip(round(x / scale), -127, 127)``.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, SCALE_EPS) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q, scale):
+    """(int8 (..., hd), fp32 (..., 1)) -> fp32 (..., hd)."""
+    return q.astype(jnp.float32) * scale
+
+
+def kv_dtype_of(cache_layer) -> str:
+    """"int8" iff a cache layer dict carries quantization scales."""
+    return "int8" if (isinstance(cache_layer, dict)
+                      and "k_scale" in cache_layer) else "bf16"

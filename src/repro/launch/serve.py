@@ -68,8 +68,8 @@ def run_router(args, mesh):
     cfg = configs.smoke(args.router_arch)
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    engine = Engine(model, RunConfig(cache_pad=16), mesh=mesh,
-                    seq_shard=args.seq_shard)
+    engine = Engine(model, RunConfig(cache_pad=16, kv_dtype=args.kv_dtype),
+                    mesh=mesh, seq_shard=args.seq_shard)
     params = engine.shard_params(params)
     store = ArtifactStore()
     store.put_tree("models/lm", params)
@@ -113,7 +113,8 @@ def run_router(args, mesh):
         per_token_s = args.per_token_s
     rcfg = ReplicaConfig(
         n_slots=args.n_slots,
-        max_len=args.prompt_len + args.max_new_tokens + 8)
+        max_len=args.prompt_len + args.max_new_tokens + 8,
+        fused_sampling=args.fused_sampling)
     # one replica retires ~1/per_token_s tokens of work per second (the
     # work-conserving time model — see router/README.md + COST_MODEL.md)
     policies = default_policies(slots_per_replica=args.n_slots,
@@ -164,13 +165,14 @@ def run_http(args, mesh):
     cfg = configs.smoke(args.router_arch)
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    engine = Engine(model, RunConfig(cache_pad=16), mesh=mesh,
-                    seq_shard=args.seq_shard)
+    engine = Engine(model, RunConfig(cache_pad=16, kv_dtype=args.kv_dtype),
+                    mesh=mesh, seq_shard=args.seq_shard)
     params = engine.shard_params(params)
     pool = ReplicaPool(
         engine, params,
         ReplicaConfig(n_slots=args.n_slots,
-                      max_len=args.prompt_len + args.max_new_tokens + 8),
+                      max_len=args.prompt_len + args.max_new_tokens + 8,
+                      fused_sampling=args.fused_sampling),
         # wall-clock serving measures time; modeled round constants are
         # the virtual harness's business (EventRouter raises on both)
         lat=LatencyModel(cold_start_s=args.cold_start, per_item_s=None),
@@ -216,6 +218,16 @@ def main(argv=None):
                          "requires that many local devices")
     ap.add_argument("--seq-shard", action="store_true",
                     help="sequence-shard decode KV caches over 'model'")
+    ap.add_argument("--kv-dtype", default="bf16",
+                    choices=("bf16", "int8"),
+                    help="decode KV cache dtype; int8 stores per-token "
+                         "quantization scales alongside (single-host "
+                         "only — conflicts with --mesh)")
+    ap.add_argument("--fused-sampling", action="store_true",
+                    help="draw each round's tokens inside the decode "
+                         "dispatch (zero separate sampler dispatches); "
+                         "same token streams as the host sampler at a "
+                         "fixed seed")
     # -- online mode (repro.router) -------------------------------------
     ap.add_argument("--router", action="store_true",
                     help="online mode: live traffic through the "

@@ -173,6 +173,7 @@ def row_lengths(lengths, b: int):
 
 
 def attend_decode(q, k_cache, v_cache, lengths, *,
+                  k_scale=None, v_scale=None,
                   window: Optional[int] = None, cap: Optional[float] = None,
                   impl: str = "xla"):
     """Single-token decode. q: (B,1,H,hd); caches: (B,Smax,KV,hd).
@@ -183,20 +184,34 @@ def attend_decode(q, k_cache, v_cache, lengths, *,
     the shared-batched-cache serving path decodes every slot at its own
     position in one dispatch.
 
+    ``k_scale``/``v_scale`` ((B,Smax,KV,1) fp32, both or neither) mark
+    the caches as int8 per-token-quantized (``kernels…quant``): the
+    Pallas path dequantizes tiles in VMEM; the XLA path pre-dequantizes.
+    Not supported under ``seq_shard`` (collectives carry bf16 partials).
+
     Sharding: q is batch-sharded; under ``impl="seq_shard"`` the caches
     must carry ``NamedSharding`` with the sequence dim over "model" (the
     ``cache_shardings(seq_shard=True)`` layout) — the output returns
     batch-sharded only. Other impls expect kv_heads over "model" at most.
     """
     if impl == "seq_shard":
+        if k_scale is not None:
+            raise ValueError(
+                "int8 KV caches do not support attn_impl='seq_shard' — "
+                "use kv_dtype='bf16' with sequence sharding (see "
+                "serving/README.md)")
         from repro.dist import collectives
         return collectives.seq_sharded_decode(
             q, k_cache, v_cache, lengths, window=window, cap=cap)
     if impl == "pallas":
         from repro.kernels.decode_attention import ops as da_ops
         return da_ops.decode_attention(
-            q[:, 0], k_cache, v_cache, lengths, window=window, softcap=cap
-        )[:, None]
+            q[:, 0], k_cache, v_cache, lengths, k_scale=k_scale,
+            v_scale=v_scale, window=window, softcap=cap)[:, None]
+    if k_scale is not None:
+        from repro.kernels.decode_attention.quant import dequantize_kv
+        k_cache = dequantize_kv(k_cache, k_scale)
+        v_cache = dequantize_kv(v_cache, v_scale)
     b, _, h, hd = q.shape
     kvh = k_cache.shape[2]
     g = h // kvh
@@ -259,7 +274,8 @@ def write_kv_rows(cache, new, lengths):
 
 
 def attn_decode_layer(cfg: ModelConfig, p, x, k_cache, v_cache, lengths, *,
-                      mixer: str, impl: str = "xla"):
+                      mixer: str, impl: str = "xla",
+                      k_scale=None, v_scale=None):
     """Decode sublayer: project, write new kv at each row's ``lengths[b]``,
     attend.
 
@@ -271,6 +287,13 @@ def attn_decode_layer(cfg: ModelConfig, p, x, k_cache, v_cache, lengths, *,
     owns its global position (fused with the attention in one shard_map),
     so SPMD never gathers the cache around the update; other impls use a
     per-row dynamic_update_slice.
+
+    When ``k_scale``/``v_scale`` ((B,Smax,KV,1) fp32 scale caches) are
+    given the kv caches are int8: the new token's post-RoPE k/v are
+    quantized per token, both the int8 values and the scales are written
+    at ``lengths[b]``, and the return grows to the 5-tuple
+    (y, k_cache, v_cache, k_scale, v_scale) — callers that never pass
+    scales keep the 3-tuple contract unchanged.
     """
     b = x.shape[0]
     lengths = row_lengths(lengths, b)
@@ -281,6 +304,11 @@ def attn_decode_layer(cfg: ModelConfig, p, x, k_cache, v_cache, lengths, *,
         k = apply_rope(k, pos, cfg.rope_theta)
     window = cfg.window if mixer == "attn_local" else None
     if impl == "seq_shard":
+        if k_scale is not None:
+            raise ValueError(
+                "int8 KV caches do not support attn_impl='seq_shard' — "
+                "use kv_dtype='bf16' with sequence sharding (see "
+                "serving/README.md)")
         # fused write+attend over the sequence-sharded cache (shard_map):
         # the write must happen shard-locally or SPMD gathers the cache.
         from repro.dist import collectives
@@ -288,10 +316,19 @@ def attn_decode_layer(cfg: ModelConfig, p, x, k_cache, v_cache, lengths, *,
             q, k, v, k_cache, v_cache, lengths, window=window,
             cap=cfg.attn_softcap)
         return out_proj(p, o), k_cache, v_cache
+    if k_scale is not None:
+        from repro.kernels.decode_attention.quant import quantize_kv
+        k, ks_new = quantize_kv(k)   # (B,1,KV,hd) int8, (B,1,KV,1) fp32
+        v, vs_new = quantize_kv(v)
+        k_scale = write_kv_rows(k_scale, ks_new, lengths)
+        v_scale = write_kv_rows(v_scale, vs_new, lengths)
     k_cache = write_kv_rows(k_cache, k, lengths)
     v_cache = write_kv_rows(v_cache, v, lengths)
-    o = attend_decode(q, k_cache, v_cache, lengths, window=window,
+    o = attend_decode(q, k_cache, v_cache, lengths, k_scale=k_scale,
+                      v_scale=v_scale, window=window,
                       cap=cfg.attn_softcap, impl=impl)
+    if k_scale is not None:
+        return out_proj(p, o), k_cache, v_cache, k_scale, v_scale
     return out_proj(p, o), k_cache, v_cache
 
 
@@ -320,6 +357,7 @@ def write_kv_pages(pool, new, page_table, lengths, page_size: int):
 
 
 def attend_decode_paged(q, k_pages, v_pages, page_table, lengths, *,
+                        k_scale=None, v_scale=None,
                         window: Optional[int] = None,
                         cap: Optional[float] = None, impl: str = "xla"):
     """Single-token decode through a paged KV cache. q: (B,1,H,hd);
@@ -328,9 +366,12 @@ def attend_decode_paged(q, k_pages, v_pages, page_table, lengths, *,
     ``impl="pallas"`` reads KV tiles through the page table inside the
     kernel's index map (no dense view ever materializes); the XLA path
     gathers each row's logical view first — correctness fallback, not
-    the memory win. ``seq_shard`` is NOT supported on the paged path
-    (the serving layer falls back to the dense cache under seq-shard;
-    documented in serving/README.md).
+    the memory win. ``k_scale``/``v_scale`` ((P, ps, KV, 1) fp32 scale
+    pools, both or neither) mark the pools as int8 per-token-quantized;
+    scale pages ride the same page-table indirection as the data.
+    ``seq_shard`` is NOT supported on the paged path (the serving layer
+    falls back to the dense cache under seq-shard; documented in
+    serving/README.md).
     """
     if impl == "seq_shard":
         raise ValueError(
@@ -342,9 +383,14 @@ def attend_decode_paged(q, k_pages, v_pages, page_table, lengths, *,
     if impl == "pallas":
         from repro.kernels.decode_attention import ops as da_ops
         return da_ops.paged_decode_attention(
-            q[:, 0], k_pages, v_pages, lengths, page_table, window=window,
+            q[:, 0], k_pages, v_pages, lengths, page_table,
+            k_scale=k_scale, v_scale=v_scale, window=window,
             softcap=cap)[:, None]
     from repro.kernels.decode_attention.ref import gather_pages
+    if k_scale is not None:
+        from repro.kernels.decode_attention.quant import dequantize_kv
+        k_pages = dequantize_kv(k_pages, k_scale)
+        v_pages = dequantize_kv(v_pages, v_scale)
     k = gather_pages(k_pages, page_table)
     v = gather_pages(v_pages, page_table)
     return attend_decode(q, k, v, lengths, window=window, cap=cap,
@@ -353,10 +399,15 @@ def attend_decode_paged(q, k_pages, v_pages, page_table, lengths, *,
 
 def attn_decode_layer_paged(cfg: ModelConfig, p, x, k_pages, v_pages,
                             page_table, lengths, *, mixer: str,
-                            page_size: int, impl: str = "xla"):
+                            page_size: int, impl: str = "xla",
+                            k_scale=None, v_scale=None):
     """Paged counterpart of :func:`attn_decode_layer`: project, write the
     new kv through each row's page table, attend through the same table.
-    Returns (y, new_k_pages, new_v_pages)."""
+    Returns (y, new_k_pages, new_v_pages) — or, when ``k_scale``/
+    ``v_scale`` scale pools are given (int8 pools), the 5-tuple
+    (y, k_pages, v_pages, k_scale, v_scale) with the new token's
+    post-RoPE k/v quantized and its scales written through the SAME page
+    table (so COW copies and shared prefixes carry scales with data)."""
     b = x.shape[0]
     lengths = row_lengths(lengths, b)
     q, k, v = project_qkv(cfg, p, x)
@@ -365,16 +416,27 @@ def attn_decode_layer_paged(cfg: ModelConfig, p, x, k_pages, v_pages,
         q = apply_rope(q, pos, cfg.rope_theta)
         k = apply_rope(k, pos, cfg.rope_theta)
     window = cfg.window if mixer == "attn_local" else None
+    if k_scale is not None:
+        from repro.kernels.decode_attention.quant import quantize_kv
+        k, ks_new = quantize_kv(k)
+        v, vs_new = quantize_kv(v)
+        k_scale = write_kv_pages(k_scale, ks_new, page_table, lengths,
+                                 page_size)
+        v_scale = write_kv_pages(v_scale, vs_new, page_table, lengths,
+                                 page_size)
     k_pages = write_kv_pages(k_pages, k, page_table, lengths, page_size)
     v_pages = write_kv_pages(v_pages, v, page_table, lengths, page_size)
     o = attend_decode_paged(q, k_pages, v_pages, page_table, lengths,
+                            k_scale=k_scale, v_scale=v_scale,
                             window=window, cap=cfg.attn_softcap, impl=impl)
+    if k_scale is not None:
+        return out_proj(p, o), k_pages, v_pages, k_scale, v_scale
     return out_proj(p, o), k_pages, v_pages
 
 
 def attn_extend_layer_paged(cfg: ModelConfig, p, x, k_pages, v_pages,
                             table_row, start, *, mixer: str,
-                            page_size: int):
+                            page_size: int, k_scale=None, v_scale=None):
     """Chunked prefill-with-history for ONE paged row.
 
     x: (1, L, D) — the chunk occupies logical positions
@@ -386,7 +448,9 @@ def attn_extend_layer_paged(cfg: ModelConfig, p, x, k_pages, v_pages,
     over [history ++ chunk] causally (``q_offset=start``). Always the
     XLA gather path — a fused Pallas chunked-prefill kernel is future
     work; the decode hot loop is where the paged kernel lives.
-    Returns (y (1,L,D), new_k_pages, new_v_pages).
+    Returns (y (1,L,D), new_k_pages, new_v_pages) — the 5-tuple with
+    scale pools appended when ``k_scale``/``v_scale`` are given (int8
+    pools: the chunk's post-RoPE k/v quantize per token before writing).
     """
     L = x.shape[1]
     positions = start + jnp.arange(L)[None, :]
@@ -399,15 +463,28 @@ def attn_extend_layer_paged(cfg: ModelConfig, p, x, k_pages, v_pages,
     slot = jnp.clip(pos // page_size, 0, pmax - 1)
     pages = table_row[slot]
     offs = pos % page_size
+    if k_scale is not None:
+        from repro.kernels.decode_attention.quant import quantize_kv
+        k, ks_new = quantize_kv(k)   # (1,L,KV,hd) int8, (1,L,KV,1) fp32
+        v, vs_new = quantize_kv(v)
+        k_scale = k_scale.at[pages, offs].set(ks_new[0])
+        v_scale = v_scale.at[pages, offs].set(vs_new[0])
     k_pages = k_pages.at[pages, offs].set(k[0].astype(k_pages.dtype))
     v_pages = v_pages.at[pages, offs].set(v[0].astype(v_pages.dtype))
     from repro.kernels.decode_attention.ref import gather_pages
-    kr = gather_pages(k_pages, table_row[None])  # (1, Pmax*ps, KV, hd)
-    vr = gather_pages(v_pages, table_row[None])
+    if k_scale is not None:
+        from repro.kernels.decode_attention.quant import dequantize_kv
+        kr = gather_pages(dequantize_kv(k_pages, k_scale), table_row[None])
+        vr = gather_pages(dequantize_kv(v_pages, v_scale), table_row[None])
+    else:
+        kr = gather_pages(k_pages, table_row[None])  # (1, Pmax*ps, KV, hd)
+        vr = gather_pages(v_pages, table_row[None])
     window = cfg.window if mixer == "attn_local" else None
     o = _attend_dense(q, kr.astype(q.dtype), vr.astype(q.dtype),
                       mask_kind="causal", window=window,
                       cap=cfg.attn_softcap, q_offset=start)
+    if k_scale is not None:
+        return out_proj(p, o), k_pages, v_pages, k_scale, v_scale
     return out_proj(p, o), k_pages, v_pages
 
 

@@ -206,6 +206,8 @@ class RunConfig:
     cache_pad: int = 128          # decode cache slack past prefill length
     grad_compression: str = "none"  # none | bf16 | int8 (cross-pod all-reduce)
     donate_cache: bool = True
+    kv_dtype: str = "bf16"        # bf16 | int8 (per-token-scaled KV cache;
+                                  # kernels/decode_attention/quant.py)
 
 
 # ---------------------------------------------------------------------------

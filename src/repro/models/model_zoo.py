@@ -98,26 +98,33 @@ class Model:
     # encdec.EncDecCache) — the leaf that makes one shared batched cache
     # rag-decodable across serving slots.
     def cache_specs(self, batch: int, max_len: int,
-                    enc_len: Optional[int] = None):
+                    enc_len: Optional[int] = None,
+                    kv_dtype: str = "bf16"):
         if self.cfg.encdec:
+            if kv_dtype != "bf16":
+                raise ValueError(
+                    "encoder-decoder models have no int8 KV layout "
+                    "(cross-attn caches stay bf16)")
             return encdec.cache_specs(self.cfg, batch, max_len,
                                       enc_len or max_len)
-        return transformer.cache_specs(self.cfg, batch, max_len)
+        return transformer.cache_specs(self.cfg, batch, max_len, kv_dtype)
 
     def init_cache(self, batch: int, max_len: int,
-                   enc_len: Optional[int] = None):
-        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                            self.cache_specs(batch, max_len, enc_len))
+                   enc_len: Optional[int] = None,
+                   kv_dtype: str = "bf16"):
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.cache_specs(batch, max_len, enc_len, kv_dtype=kv_dtype))
 
     def paged_cache_specs(self, batch: int, n_pages: int, page_size: int,
-                          max_pages: int):
+                          max_pages: int, kv_dtype: str = "bf16"):
         """Block-paged cache tree (decoder-only, attention-only patterns —
         raises ValueError otherwise; those stay on the dense cache)."""
         if self.cfg.encdec:
             raise ValueError("encoder-decoder models have no paged cache "
                              "layout (cross-attn KV is per-request dense)")
         return transformer.paged_cache_specs(self.cfg, batch, n_pages,
-                                             page_size, max_pages)
+                                             page_size, max_pages, kv_dtype)
 
     def extend_row(self, run: RunConfig, params, cache, row, tokens):
         """Chunked prefill-with-history of one paged row (cold admission

@@ -240,16 +240,28 @@ class Cache:
         return cls(*children)
 
 
-def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
-    """Abstract cache tree (ShapeDtypeStruct leaves) for the dry-run."""
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                kv_dtype: str = "bf16"):
+    """Abstract cache tree (ShapeDtypeStruct leaves) for the dry-run.
+
+    ``kv_dtype="int8"`` stores KV leaves as int8 and adds per-token fp32
+    ``k_scale``/``v_scale`` leaves of shape (G, B, max_len, KV, 1) — the
+    dense layout of ``kernels.decode_attention.quant`` (attention layers
+    only; SSM state is untouched).
+    """
     g = cfg.n_groups
     layers = []
     for spec in cfg.pattern:
         if spec.mixer.startswith("attn"):
-            kv = jax.ShapeDtypeStruct(
-                (g, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
-                jnp.bfloat16)
-            layers.append({"k": kv, "v": kv})
+            shape = (g, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+            if kv_dtype == "int8":
+                kv = jax.ShapeDtypeStruct(shape, jnp.int8)
+                sc = jax.ShapeDtypeStruct(shape[:-1] + (1,), jnp.float32)
+                layers.append({"k": kv, "v": kv,
+                               "k_scale": sc, "v_scale": sc})
+            else:
+                kv = jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+                layers.append({"k": kv, "v": kv})
         else:
             one = ssm_lib.ssm_cache_specs(cfg, cfg.ssm, batch)
             layers.append(jax.tree.map(
@@ -258,9 +270,10 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
                  lengths=jax.ShapeDtypeStruct((batch,), jnp.int32))
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               kv_dtype: str = "bf16"):
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                        cache_specs(cfg, batch, max_len))
+                        cache_specs(cfg, batch, max_len, kv_dtype))
 
 
 @jax.tree_util.register_pytree_node_class
@@ -298,10 +311,13 @@ class PagedCache:
 
 
 def paged_cache_specs(cfg: ModelConfig, batch: int, n_pages: int,
-                      page_size: int, max_pages: int):
+                      page_size: int, max_pages: int,
+                      kv_dtype: str = "bf16"):
     """Abstract PagedCache tree. ``n_pages`` physical pages per layer pool
     (page 0 reserved as null); each row addresses up to ``max_pages``
     logical pages (max_pages * page_size = the row's max_len).
+    ``kv_dtype="int8"`` adds per-token fp32 scale POOLS
+    (G, n_pages, page_size, KV, 1) that page exactly like the data.
 
     Only attention-only patterns page: SSM state is O(1) per row (nothing
     to page), and mixed patterns would need a second cache layout — the
@@ -313,20 +329,28 @@ def paged_cache_specs(cfg: ModelConfig, batch: int, n_pages: int,
                 f"paged KV caches require an attention-only pattern; mixer "
                 f"{spec.mixer!r} has no paged layout (use the dense cache)")
     g = cfg.n_groups
-    kv = jax.ShapeDtypeStruct(
-        (g, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16)
+    shape = (g, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+    if kv_dtype == "int8":
+        kv = jax.ShapeDtypeStruct(shape, jnp.int8)
+        sc = jax.ShapeDtypeStruct(shape[:-1] + (1,), jnp.float32)
+        layer = {"k": kv, "v": kv, "k_scale": sc, "v_scale": sc}
+    else:
+        kv = jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+        layer = {"k": kv, "v": kv}
     return PagedCache(
-        layers=tuple({"k": kv, "v": kv} for _ in cfg.pattern),
+        layers=tuple(dict(layer) for _ in cfg.pattern),
         page_table=jax.ShapeDtypeStruct((batch, max_pages), jnp.int32),
         lengths=jax.ShapeDtypeStruct((batch,), jnp.int32),
         page_size=page_size)
 
 
 def init_paged_cache(cfg: ModelConfig, batch: int, n_pages: int,
-                     page_size: int, max_pages: int):
+                     page_size: int, max_pages: int,
+                     kv_dtype: str = "bf16"):
     return jax.tree.map(
         lambda s: jnp.zeros(s.shape, s.dtype),
-        paged_cache_specs(cfg, batch, n_pages, page_size, max_pages))
+        paged_cache_specs(cfg, batch, n_pages, page_size, max_pages,
+                          kv_dtype))
 
 
 # ---------------------------------------------------------------------------
@@ -359,8 +383,18 @@ def prefill(cfg: ModelConfig, run: RunConfig, params, *, tokens=None,
                     cfg, p["attn"], h, mixer=spec.mixer, positions=positions,
                     impl=run.attn_impl, return_kv=True)
                 pad = [(0, 0), (0, max_len - s), (0, 0), (0, 0)]
-                caches.append({"k": jnp.pad(k.astype(jnp.bfloat16), pad),
-                               "v": jnp.pad(v.astype(jnp.bfloat16), pad)})
+                if run.kv_dtype == "int8":
+                    from repro.kernels.decode_attention.quant import \
+                        quantize_kv
+                    kq, ks = quantize_kv(k)
+                    vq, vs = quantize_kv(v)
+                    caches.append({"k": jnp.pad(kq, pad),
+                                   "v": jnp.pad(vq, pad),
+                                   "k_scale": jnp.pad(ks, pad),
+                                   "v_scale": jnp.pad(vs, pad)})
+                else:
+                    caches.append({"k": jnp.pad(k.astype(jnp.bfloat16), pad),
+                                   "v": jnp.pad(v.astype(jnp.bfloat16), pad)})
             else:
                 h, sc = ssm_lib.ssm_forward(cfg, cfg.ssm, p["ssm"], h,
                                             return_state=True)
@@ -424,16 +458,27 @@ def decode_step(cfg: ModelConfig, run: RunConfig, params, cache: Cache,
         for spec, p, c in zip(cfg.pattern, gp, lc):
             h = apply_norm(cfg, p["norm1"], x)
             if spec.mixer.startswith("attn"):
+                quant = "k_scale" in c  # int8 cache layer carries scales
                 if paged:
-                    h, nk, nv = attn_lib.attn_decode_layer_paged(
+                    out = attn_lib.attn_decode_layer_paged(
                         cfg, p["attn"], h, c["k"], c["v"], cache.page_table,
                         lengths, mixer=spec.mixer,
-                        page_size=cache.page_size, impl=run.attn_impl)
+                        page_size=cache.page_size, impl=run.attn_impl,
+                        k_scale=c["k_scale"] if quant else None,
+                        v_scale=c["v_scale"] if quant else None)
                 else:
-                    h, nk, nv = attn_lib.attn_decode_layer(
+                    out = attn_lib.attn_decode_layer(
                         cfg, p["attn"], h, c["k"], c["v"], lengths,
-                        mixer=spec.mixer, impl=run.attn_impl)
-                new_caches.append({"k": nk, "v": nv})
+                        mixer=spec.mixer, impl=run.attn_impl,
+                        k_scale=c["k_scale"] if quant else None,
+                        v_scale=c["v_scale"] if quant else None)
+                if quant:
+                    h, nk, nv, nks, nvs = out
+                    new_caches.append({"k": nk, "v": nv,
+                                       "k_scale": nks, "v_scale": nvs})
+                else:
+                    h, nk, nv = out
+                    new_caches.append({"k": nk, "v": nv})
             else:
                 h, nc = ssm_lib.ssm_decode(cfg, cfg.ssm, p["ssm"], h, c)
                 new_caches.append(nc)
@@ -505,10 +550,19 @@ def extend_paged(cfg: ModelConfig, run: RunConfig, params, cache: PagedCache,
         for spec, p, c in zip(cfg.pattern, gp, lc):
             h = apply_norm(cfg, p["norm1"], x)
             # paged_cache_specs guarantees an attention-only pattern
-            h, nk, nv = attn_lib.attn_extend_layer_paged(
+            quant = "k_scale" in c
+            out = attn_lib.attn_extend_layer_paged(
                 cfg, p["attn"], h, c["k"], c["v"], table_row, start,
-                mixer=spec.mixer, page_size=cache.page_size)
-            new_caches.append({"k": nk, "v": nv})
+                mixer=spec.mixer, page_size=cache.page_size,
+                k_scale=c["k_scale"] if quant else None,
+                v_scale=c["v_scale"] if quant else None)
+            if quant:
+                h, nk, nv, nks, nvs = out
+                new_caches.append({"k": nk, "v": nv,
+                                   "k_scale": nks, "v_scale": nvs})
+            else:
+                h, nk, nv = out
+                new_caches.append({"k": nk, "v": nv})
             if cfg.sandwich_norms:
                 h = apply_norm(cfg, p["post_norm1"], h)
             x = x + h

@@ -146,6 +146,7 @@ class ReplicaConfig:
     paged: bool = False          # block-paged KV cache per replica
     page_size: int = 16
     n_pages: Optional[int] = None  # physical pool size; None = worst case
+    fused_sampling: bool = False   # draw tokens inside the decode dispatch
 
 
 class Replica:
@@ -259,7 +260,8 @@ class ReplicaPool:
                                     max_len=self.cfg.max_len, batched=True,
                                     paged=self.cfg.paged,
                                     page_size=self.cfg.page_size,
-                                    n_pages=self.cfg.n_pages)
+                                    n_pages=self.cfg.n_pages,
+                                    fused_sampling=self.cfg.fused_sampling)
         r = Replica(len(self.replicas), batcher, spawn_t=now,
                     ready_t=now + self.cold_start_s(), slice_idx=slice_idx)
         self.replicas.append(r)

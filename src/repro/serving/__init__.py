@@ -9,3 +9,8 @@ from repro.serving.engine import Engine, timed  # noqa: F401
 from repro.serving.paged import (AdmissionPlan, PageAllocator,  # noqa: F401
                                  PagesExhausted)
 from repro.serving.sampler import sample  # noqa: F401
+from repro.kernels.decode_attention.fused_sampling import (  # noqa: F401
+    apply_filters, fused_sample)
+from repro.kernels.decode_attention.quant import (KV_DTYPES,  # noqa: F401
+                                                  dequantize_kv,
+                                                  quantize_kv)

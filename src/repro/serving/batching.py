@@ -34,11 +34,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.engine import Engine
 from repro.serving.paged import PageAllocator, PagesExhausted
+from repro.serving.sampler import sample
 
 
 @dataclasses.dataclass
@@ -136,8 +138,18 @@ class ContinuousBatcher:
     ``max_len`` explicitly when later submissions may be longer.
     Admission prefills into a free row, each round issues exactly one
     ragged batched decode dispatch for ALL slots (free rows masked by
-    ``cache.lengths``), and completion zeroes the row's length. Greedy
-    sampling (the serving benchmarks' configuration).
+    ``cache.lengths``), and completion zeroes the row's length.
+
+    Sampling: greedy by default (``temperature=0``); ``temperature`` /
+    ``top_k`` / ``top_p`` / ``seed`` configure the draw. With
+    ``fused_sampling=False`` each round's tokens come from one extra
+    HOST sampler dispatch over the (B, V) logits; ``fused_sampling=True``
+    (batched modes only) draws them INSIDE the decode dispatch
+    (``Engine.decode_sample`` / ``prefill_into_sample`` /
+    ``extend_row_sample``) — still one decode dispatch per round, now
+    with zero sampler dispatches and no logits HBM round-trip. Both
+    modes consume one PRNG key per admission and one per round, so at
+    the same ``seed`` they emit identical token streams.
 
     ``batched=False``: legacy per-slot mode — each slot owns a batch-1
     cache and every active slot costs one decode dispatch per round.
@@ -161,10 +173,11 @@ class ContinuousBatcher:
     stays alive. (This used to raise out of ``step()``, killing a whole
     router round mid-traffic when one long prompt arrived late.)
 
-    Counters: ``decode_dispatches`` = ``Engine.decode`` calls (what the
-    batched mode collapses to 1/round), ``decode_steps`` = slot-steps of
-    decode work (identical between modes for the same workload),
-    ``rounds`` = scheduling rounds driven.
+    Counters: ``decode_dispatches`` = decode calls (what the batched
+    mode collapses to 1/round), ``decode_steps`` = slot-steps of decode
+    work (identical between modes for the same workload),
+    ``sampler_dispatches`` = host-sampler dispatches (0 under
+    ``fused_sampling``), ``rounds`` = scheduling rounds driven.
 
     Streaming-callback contract: when ``on_token`` is set, every token
     COMMIT calls ``on_token(req, token, prefill)`` — ``prefill=True``
@@ -187,8 +200,18 @@ class ContinuousBatcher:
     page_size: int = 16
     n_pages: Optional[int] = None   # physical pool size; default = worst case
     on_token: Optional[Any] = None  # callback(req, token, prefill) per commit
+    fused_sampling: bool = False    # draw tokens inside the decode dispatch
+    temperature: float = 0.0        # 0 = greedy (the benchmark default)
+    top_k: Optional[int] = None
+    top_p: Optional[float] = None
+    seed: int = 0                   # PRNG stream for temperature sampling
 
     def __post_init__(self):
+        if self.fused_sampling and not self.batched:
+            raise ValueError(
+                "fused_sampling requires batched=True — the per-slot "
+                "legacy path keeps the host sampler (it exists as the "
+                "dispatch-overhead baseline)")
         self.scheduler = SlotScheduler(self.n_slots)
         self.cache: Any = None                # shared batched cache
         self._tokens = np.zeros((self.n_slots, 1), np.int32)
@@ -196,7 +219,9 @@ class ContinuousBatcher:
         self._last_tok: Dict[int, Any] = {}   # per-slot mode: slot -> (1,1)
         self.decode_steps = 0
         self.decode_dispatches = 0
+        self.sampler_dispatches = 0   # host-sampler dispatches (0 fused)
         self.rounds = 0
+        self._key = None              # lazy PRNGKey(seed) stream
         self.rejected: List[Request] = []
         if self.paged and (self.engine.mesh is not None or not self.batched):
             # paged serving is single-host batched-mode only: mesh
@@ -219,6 +244,32 @@ class ContinuousBatcher:
         req = self.scheduler.slots[slot]
         self.scheduler.slots[slot] = None
         self.rejected.append(req)
+
+    # -- sampling seams (identical key schedule in both modes) ----------
+
+    def _next_key(self):
+        """Advance the sampling PRNG stream by one key. BOTH sampling
+        modes consume exactly one key per admission and one per decode
+        round, so ``fused_sampling=True/False`` at the same ``seed``
+        produce the same token streams (the parity the fused-sampling
+        tests assert)."""
+        if self._key is None:
+            self._key = jax.random.PRNGKey(self.seed)
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _sample_host(self, logits, key) -> np.ndarray:
+        """The HOST sampling path: one extra dispatch on the (B, V)
+        logits the decode round returned. ``fused_sampling=True`` never
+        calls this — its tokens come out of the decode dispatch itself."""
+        self.sampler_dispatches += 1
+        return np.asarray(sample(logits, key, temperature=self.temperature,
+                                 top_k=self.top_k, top_p=self.top_p),
+                          np.int32)
+
+    def _fused_kw(self) -> dict:
+        return dict(temperature=self.temperature, top_k=self.top_k,
+                    top_p=self.top_p)
 
     def step(self) -> List[int]:
         """One scheduling round: admit (prefill) + decode.
@@ -261,19 +312,33 @@ class ContinuousBatcher:
                 # slot in it) alive instead of raising out of step().
                 self._reject(slot)
                 continue
-            logits, self.cache = self.engine.prefill_into(
-                self.params, self.cache, slot, req.prompt[None],
-                max_len=self.max_len)
-            tok = int(jnp.argmax(logits[0]))
+            key = self._next_key()
+            if self.fused_sampling:
+                toks, self.cache = self.engine.prefill_into_sample(
+                    self.params, self.cache, slot, req.prompt[None], key,
+                    max_len=self.max_len, **self._fused_kw())
+                tok = int(toks[0])
+            else:
+                logits, self.cache = self.engine.prefill_into(
+                    self.params, self.cache, slot, req.prompt[None],
+                    max_len=self.max_len)
+                tok = int(self._sample_host(logits, key)[0])
             self._tokens[slot, 0] = tok
             self._commit_batched(slot, tok, prefill=True)
         if not self.scheduler.active:
             return
-        logits, self.cache = self.engine.decode(self.params, self.cache,
-                                                self._tokens)
+        key = self._next_key()
+        if self.fused_sampling:
+            toks, self.cache = self.engine.decode_sample(
+                self.params, self.cache, self._tokens, key,
+                **self._fused_kw())
+            toks = np.asarray(toks, np.int32)
+        else:
+            logits, self.cache = self.engine.decode(self.params, self.cache,
+                                                    self._tokens)
+            toks = self._sample_host(logits, key)
         self.decode_dispatches += 1
         self.decode_steps += len(self.scheduler.active)
-        toks = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         self._tokens[:, 0] = toks
         for slot in list(self.scheduler.active):
             self._commit_batched(slot, int(toks[slot]))
@@ -332,10 +397,17 @@ class ContinuousBatcher:
                 continue
             self.cache = self.engine.assign_row_pages(
                 self.cache, slot, plan.pages, plan.start_len)
-            logits, self.cache = self.engine.extend_row(
-                self.params, self.cache, slot, plan.suffix[None])
+            key = self._next_key()
+            if self.fused_sampling:
+                toks, self.cache = self.engine.extend_row_sample(
+                    self.params, self.cache, slot, plan.suffix[None], key,
+                    **self._fused_kw())
+                tok = int(toks[0])
+            else:
+                logits, self.cache = self.engine.extend_row(
+                    self.params, self.cache, slot, plan.suffix[None])
+                tok = int(self._sample_host(logits, key)[0])
             self._host_len[slot] = len(req.prompt)
-            tok = int(jnp.argmax(logits[0]))
             self._tokens[slot, 0] = tok
             self._commit_paged(slot, tok, prefill=True)
         if not self.scheduler.active:
@@ -351,11 +423,18 @@ class ContinuousBatcher:
                 self.cache = self.engine.assign_row_pages(
                     self.cache, slot, self.allocator.rows[slot],
                     self._host_len[slot])
-        logits, self.cache = self.engine.decode(self.params, self.cache,
-                                                self._tokens)
+        key = self._next_key()
+        if self.fused_sampling:
+            toks, self.cache = self.engine.decode_sample(
+                self.params, self.cache, self._tokens, key,
+                **self._fused_kw())
+            toks = np.asarray(toks, np.int32)
+        else:
+            logits, self.cache = self.engine.decode(self.params, self.cache,
+                                                    self._tokens)
+            toks = self._sample_host(logits, key)
         self.decode_dispatches += 1
         self.decode_steps += len(self.scheduler.active)
-        toks = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         self._tokens[:, 0] = toks
         for slot in list(self.scheduler.active):
             self._host_len[slot] += 1

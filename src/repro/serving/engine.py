@@ -37,6 +37,8 @@ from jax.sharding import NamedSharding
 
 from repro.dist import context as dctx
 from repro.dist import sharding as shd
+from repro.kernels.decode_attention.fused_sampling import fused_sample
+from repro.kernels.decode_attention.quant import KV_DTYPES
 from repro.models.common import RunConfig
 from repro.models.model_zoo import Model
 from repro.serving.sampler import sample
@@ -87,6 +89,19 @@ class Engine:
     seq_shard: bool = False
 
     def __post_init__(self):
+        if self.run.kv_dtype not in KV_DTYPES:
+            raise ValueError(
+                f"kv_dtype={self.run.kv_dtype!r} not in {KV_DTYPES}")
+        if self.run.kv_dtype == "int8":
+            if self.mesh is not None:
+                raise ValueError(
+                    "kv_dtype='int8' is single-host only — the sharding "
+                    "planner has no layout for the scale leaves (see "
+                    "serving/README.md); use kv_dtype='bf16' under a mesh")
+            if self.model.cfg.encdec:
+                raise ValueError(
+                    "encoder-decoder models have no int8 KV layout "
+                    "(cross-attn caches stay bf16)")
         if self.mesh is not None:
             if self.seq_shard and self.run.attn_impl != "seq_shard":
                 self.run = dataclasses.replace(self.run,
@@ -292,7 +307,8 @@ class Engine:
             raise ValueError(
                 f"new_cache needs positive batch/max_len, got "
                 f"batch={batch} max_len={max_len}")
-        specs = self.model.cache_specs(batch, max_len, enc_len)
+        specs = self.model.cache_specs(batch, max_len, enc_len,
+                                       kv_dtype=self.run.kv_dtype)
         if self.mesh is None:
             return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                                 specs)
@@ -305,10 +321,11 @@ class Engine:
                     out_shardings=self.cache_sharding(specs)))
             return fn()
 
-    def _jit_prefill_into(self, cache, seq_len: int, max_len: int):
+    def _jit_prefill_into(self, cache, seq_len: int, max_len: int,
+                          sample_kw: Optional[dict] = None):
         donate = (1,) if self.donate_cache else ()
 
-        def _prefill_into(params, cache, batch, row):
+        def _prefill_into(params, cache, batch, row, key=None):
             logits, small = self.model.prefill(self.run, params, batch,
                                                max_len=max_len)
             zero = jnp.zeros((), jnp.int32)
@@ -322,7 +339,10 @@ class Engine:
                 return jax.lax.dynamic_update_slice(
                     big, sm.astype(big.dtype), starts)
 
-            return logits, jax.tree.map(write, cache, small)
+            cache = jax.tree.map(write, cache, small)
+            if sample_kw is not None:  # fused epilogue: (1,) token out
+                return fused_sample(logits, key, **sample_kw), cache
+            return logits, cache
 
         if self.mesh is None:
             return jax.jit(_prefill_into, donate_argnums=donate)
@@ -331,6 +351,15 @@ class Engine:
         tok_sh = shd.input_shardings(
             jax.ShapeDtypeStruct((1, seq_len), jnp.int32), self.mesh)
         row_sh = NamedSharding(self.mesh, jax.sharding.PartitionSpec())
+        if sample_kw is not None:
+            key_sh = NamedSharding(self.mesh,
+                                   jax.sharding.PartitionSpec())
+            tok_out_sh = self._batch_sharding((1,))
+            return jax.jit(_prefill_into, donate_argnums=donate,
+                           in_shardings=(self.params_sharding, cache_sh,
+                                         {"tokens": tok_sh}, row_sh,
+                                         key_sh),
+                           out_shardings=(tok_out_sh, cache_sh))
         return jax.jit(_prefill_into, donate_argnums=donate,
                        in_shardings=(self.params_sharding, cache_sh,
                                      {"tokens": tok_sh}, row_sh),
@@ -434,7 +463,8 @@ class Engine:
         if min(batch, n_pages, page_size, max_pages) <= 0:
             raise ValueError("paged cache dims must be positive")
         specs = self.model.paged_cache_specs(batch, n_pages, page_size,
-                                             max_pages)
+                                             max_pages,
+                                             kv_dtype=self.run.kv_dtype)
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
 
     def _jit_assign_row(self):
@@ -547,29 +577,176 @@ class Engine:
                   jnp.asarray(dst, jnp.int32))
 
     # ------------------------------------------------------------------
+    # Fused sampling (token ids out of the decode dispatch — no separate
+    # sampler dispatch, no (B, V) logits round-trip through HBM)
+    # ------------------------------------------------------------------
+
+    def _fused_kwargs(self, temperature, top_k, top_p):
+        # under a mesh the logits arrive vocab-sharded over "model" —
+        # force the jnp lowering (the Pallas epilogue wants local vocab)
+        return dict(temperature=temperature, top_k=top_k, top_p=top_p,
+                    use_kernel=False if self.mesh is not None else None)
+
+    def _jit_decode_sample(self, cache, temperature, top_k, top_p):
+        donate = (1,) if self.donate_cache else ()
+        kw = self._fused_kwargs(temperature, top_k, top_p)
+
+        def _ds(params, cache, token, key):
+            logits, cache = self.model.decode_step(self.run, params, cache,
+                                                   {"token": token})
+            return fused_sample(logits, key, **kw), cache
+
+        if self.mesh is None:
+            return jax.jit(_ds, donate_argnums=donate)
+        cache_sh = self.cache_sharding(cache)
+        b = jax.tree.leaves(cache)[0].shape[1]
+        tok_in_sh = self._batch_sharding((b, 1))
+        tok_out_sh = self._batch_sharding((b,))
+        key_sh = NamedSharding(self.mesh, jax.sharding.PartitionSpec())
+        return jax.jit(_ds, donate_argnums=donate,
+                       in_shardings=(self.params_sharding, cache_sh,
+                                     tok_in_sh, key_sh),
+                       out_shardings=(tok_out_sh, cache_sh))
+
+    def decode_sample(self, params, cache, token, key, *,
+                      temperature: float = 0.0,
+                      top_k: Optional[int] = None,
+                      top_p: Optional[float] = None
+                      ) -> Tuple[jax.Array, Any]:
+        """One decode step WITH the sampler fused into the executable.
+
+        Same ragged-batch/pinned-sharding/donation contract as
+        :meth:`decode`, but returns ((B,) int32 sampled tokens, cache):
+        the (B, V) logits never leave the dispatch. At a fixed ``key``
+        the tokens equal ``sample(logits, key, ...)`` over
+        :meth:`decode`'s logits (the jnp lowering is bit-identical; the
+        TPU Pallas epilogue may flip fp near-ties — see
+        ``kernels.decode_attention.fused_sampling``). Sampling params are
+        static — part of the executable bucket key.
+        """
+        with self._ctx():
+            token = self.shard_inputs(jnp.asarray(token))
+            fn = self._get_exec(
+                "decode_sample",
+                (_shape_key(cache), (temperature, top_k, top_p)),
+                lambda: self._jit_decode_sample(cache, temperature, top_k,
+                                                top_p))
+            return fn(params, cache, token, key)
+
+    def prefill_into_sample(self, params, cache, row, tokens, key, *,
+                            temperature: float = 0.0,
+                            top_k: Optional[int] = None,
+                            top_p: Optional[float] = None,
+                            max_len: Optional[int] = None
+                            ) -> Tuple[jax.Array, Any]:
+        """:meth:`prefill_into` with the first sampled token fused in.
+
+        Returns ((1,) int32 token, updated cache) — the admission's
+        last-token logits are sampled inside the same dispatch chain.
+        """
+        tokens = jnp.asarray(tokens)
+        _, s = tokens.shape
+        if max_len is None:
+            max_len = next((l.shape[2] for l in jax.tree.leaves(cache)
+                            if getattr(l, "ndim", 0) >= 5),
+                           s + self.run.cache_pad)
+        if max_len <= 0:
+            raise ValueError(f"max_len must be positive, got {max_len}")
+        if s > max_len:
+            raise ValueError(
+                f"prompt of {s} tokens exceeds the shared cache's "
+                f"capacity of {max_len} — allocate new_cache with a "
+                f"larger max_len")
+        with self._ctx():
+            batch = self.shard_inputs({"tokens": tokens})
+            fn = self._get_exec(
+                "prefill_into_sample",
+                (_shape_key(cache), _shape_key(batch),
+                 (temperature, top_k, top_p)),
+                lambda: self._jit_prefill_into(
+                    cache, s, max_len,
+                    sample_kw=self._fused_kwargs(temperature, top_k,
+                                                 top_p)))
+            return fn(params, cache, batch, jnp.asarray(row, jnp.int32),
+                      key)
+
+    def _jit_extend_sample(self, temperature, top_k, top_p):
+        donate = (1,) if self.donate_cache else ()
+        kw = self._fused_kwargs(temperature, top_k, top_p)
+
+        def _es(params, cache, row, tokens, key):
+            logits, cache = self.model.extend_row(self.run, params, cache,
+                                                  row, tokens)
+            return fused_sample(logits, key, **kw), cache
+        return jax.jit(_es, donate_argnums=donate)
+
+    def extend_row_sample(self, params, cache, row, tokens, key, *,
+                          temperature: float = 0.0,
+                          top_k: Optional[int] = None,
+                          top_p: Optional[float] = None
+                          ) -> Tuple[jax.Array, Any]:
+        """:meth:`extend_row` with the first sampled token fused in.
+        Returns ((1,) int32 token, updated cache)."""
+        tokens = jnp.asarray(tokens)
+        s = tokens.shape[1]
+        cap = cache.page_table.shape[1] * cache.page_size
+        if s > cap:
+            raise ValueError(
+                f"{s}-token chunk exceeds the row capacity of {cap} "
+                f"({cache.page_table.shape[1]} pages × "
+                f"{cache.page_size})")
+        fn = self._get_exec(
+            "extend_row_sample",
+            (_shape_key(cache), _shape_key(tokens),
+             (temperature, top_k, top_p)),
+            lambda: self._jit_extend_sample(temperature, top_k, top_p))
+        return fn(params, cache, jnp.asarray(row, jnp.int32), tokens, key)
+
+    # ------------------------------------------------------------------
     # Generation
     # ------------------------------------------------------------------
 
     def generate(self, params, tokens, *, max_new_tokens: int = 16,
-                 temperature: float = 0.0, seed: int = 0,
-                 max_len: Optional[int] = None) -> np.ndarray:
+                 temperature: float = 0.0, top_k: Optional[int] = None,
+                 top_p: Optional[float] = None, seed: int = 0,
+                 max_len: Optional[int] = None,
+                 fused_sampling: bool = False) -> np.ndarray:
         """Greedy/temperature generation. tokens: (B, S) -> (B, S+new).
 
         Runs the sharded prefill→decode handoff: the cache stays in the
         planner layout for every step; only sampled tokens (B, 1) and the
-        final concatenation touch the host.
+        final concatenation touch the host. ``fused_sampling=True`` draws
+        each round's token inside the decode dispatch
+        (:meth:`decode_sample`); the key schedule is IDENTICAL to the
+        host-sampler path, so at the same seed both modes emit the same
+        stream (up to TPU-kernel fp near-ties).
         """
         tokens = jnp.asarray(tokens)
         with self._ctx():
             logits, cache = self.prefill(params, tokens, max_len=max_len)
             key = jax.random.PRNGKey(seed)
             outs = [tokens]
-            tok = sample(logits, key, temperature=temperature)[:, None]
-            for _ in range(max_new_tokens - 1):
-                outs.append(tok)
-                key, sub = jax.random.split(key)
-                logits, cache = self.decode(params, cache, tok)
-                tok = sample(logits, sub, temperature=temperature)[:, None]
+            if fused_sampling:
+                tok = fused_sample(
+                    logits, key,
+                    **self._fused_kwargs(temperature, top_k, top_p)
+                )[:, None]
+                for _ in range(max_new_tokens - 1):
+                    outs.append(tok)
+                    key, sub = jax.random.split(key)
+                    toks, cache = self.decode_sample(
+                        params, cache, tok, sub, temperature=temperature,
+                        top_k=top_k, top_p=top_p)
+                    tok = toks[:, None]
+            else:
+                tok = sample(logits, key, temperature=temperature,
+                             top_k=top_k, top_p=top_p)[:, None]
+                for _ in range(max_new_tokens - 1):
+                    outs.append(tok)
+                    key, sub = jax.random.split(key)
+                    logits, cache = self.decode(params, cache, tok)
+                    tok = sample(logits, sub, temperature=temperature,
+                                 top_k=top_k, top_p=top_p)[:, None]
             outs.append(tok)
             return np.asarray(jnp.concatenate(outs, axis=1))
 

@@ -1,10 +1,22 @@
-"""Token samplers over (possibly vocab-sharded) logits."""
+"""Token samplers over (possibly vocab-sharded) logits.
+
+This is the HOST sampler: a separate dispatch on the (B, V) logits a
+decode step returned. The filter math itself lives in
+``repro.kernels.decode_attention.fused_sampling.apply_filters`` and is
+shared with the fused in-dispatch sampling epilogue
+(``Engine.decode_sample`` / ``ContinuousBatcher(fused_sampling=True)``),
+so the two paths agree bit-for-bit at a fixed key — the fused path is
+the same draw without the logits' HBM round-trip. See
+docs/ARCHITECTURE.md ("Sampling paths") for the side-by-side diagram.
+"""
 from __future__ import annotations
 
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.decode_attention.fused_sampling import apply_filters
 
 
 def sample(logits, key, *, temperature: float = 0.0,
@@ -26,21 +38,6 @@ def sample(logits, key, *, temperature: float = 0.0,
     """
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    logits = logits / temperature
-    if top_k is not None:
-        vals, _ = jax.lax.top_k(logits, top_k)
-        kth = vals[:, -1:]
-        logits = jnp.where(logits < kth, -1e30, logits)
-    if top_p is not None and top_p < 1.0:
-        probs = jax.nn.softmax(logits, axis=-1)
-        sorted_probs = -jnp.sort(-probs, axis=-1)           # descending
-        cum = jnp.cumsum(sorted_probs, axis=-1)
-        # a sorted slot is in the nucleus if the mass BEFORE it is < p;
-        # the top slot is forced in so the nucleus is never empty (at
-        # top_p <= 0 the strict < would otherwise mask every token)
-        in_nucleus = (cum - sorted_probs) < top_p
-        in_nucleus = in_nucleus.at[:, 0].set(True)
-        cutoff = jnp.min(jnp.where(in_nucleus, sorted_probs, jnp.inf),
-                         axis=-1, keepdims=True)
-        logits = jnp.where(probs < cutoff, -1e30, logits)
-    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+    filtered = apply_filters(logits, temperature=temperature,
+                             top_k=top_k, top_p=top_p)
+    return jax.random.categorical(key, filtered, axis=-1).astype(jnp.int32)

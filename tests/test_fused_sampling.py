@@ -1,0 +1,234 @@
+"""Fused in-dispatch sampling: the PR-8 hot-path epilogue.
+
+The load-bearing property is BIT-EXACT parity with the host sampler at a
+fixed key — ``fused_sample`` shares ``apply_filters`` and the
+gumbel-argmax identity with ``serving.sampler.sample``, so the fused and
+host paths must emit identical tokens, not just same-distribution ones.
+Covered here at every level: the op (jnp lowering AND the Pallas kernel
+in interpret mode, including crafted top-k boundary ties, a top-p
+cumulative-mass boundary, and top_p<=0), the engine entry points
+(``decode_sample`` vs ``decode``+``sample``, ``generate`` both modes),
+and the continuous batcher (identical token streams at the same seed,
+with the counter contract: zero sampler dispatches fused, still exactly
+one decode dispatch per round, executable reuse stays flat).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.kernels.decode_attention import fused_sample
+from repro.models import RunConfig, build
+from repro.serving import ContinuousBatcher, Engine, Request
+from repro.serving.sampler import sample
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = configs.smoke("qwen2-7b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+SAMPLING_GRID = [
+    dict(temperature=0.0),                                # greedy
+    dict(temperature=0.8, top_k=5),
+    dict(temperature=1.1, top_p=0.9),
+    dict(temperature=0.7, top_k=8, top_p=0.95),
+    dict(temperature=1.0),                                # unfiltered
+]
+
+
+# ---------------------------------------------------------------------------
+# Op level: fused_sample == sample, jnp lowering and interpret kernel
+# ---------------------------------------------------------------------------
+
+
+def test_fused_jnp_matches_host_sampler_grid():
+    logits = jax.random.normal(jax.random.PRNGKey(1), (4, 64), jnp.float32)
+    for kw in SAMPLING_GRID:
+        for seed in range(4):
+            key = jax.random.PRNGKey(seed)
+            host = np.asarray(sample(logits, key, **kw))
+            fused = np.asarray(fused_sample(logits, key,
+                                            use_kernel=False, **kw))
+            assert np.array_equal(host, fused), (kw, seed)
+
+
+def test_fused_kernel_interpret_matches_host_sampler_grid():
+    logits = jax.random.normal(jax.random.PRNGKey(2), (4, 64), jnp.float32)
+    for kw in SAMPLING_GRID:
+        for seed in range(4):
+            key = jax.random.PRNGKey(seed)
+            host = np.asarray(sample(logits, key, **kw))
+            fused = np.asarray(fused_sample(logits, key, use_kernel=True,
+                                            interpret=True, **kw))
+            assert np.array_equal(host, fused), (kw, seed)
+
+
+def test_top_k_boundary_ties_keep_lax_top_k_semantics():
+    # three tokens tie at the kth value: the mask must keep ALL of them
+    # (>= kth threshold — lax.top_k tie semantics), identically in the
+    # host sampler, the jnp lowering, and the interpret kernel
+    row = np.full(32, -3.0, np.float32)
+    row[[4, 9, 17]] = 5.0        # tied at the top_k=2 threshold
+    row[1] = 4.0
+    logits = jnp.asarray(row)[None]
+    kw = dict(temperature=1.0, top_k=2)
+    seen = set()
+    for seed in range(24):
+        key = jax.random.PRNGKey(seed)
+        host = int(sample(logits, key, **kw)[0])
+        assert host in (4, 9, 17)   # every kth-value tie stays eligible
+        assert int(fused_sample(logits, key, use_kernel=False,
+                                **kw)[0]) == host
+        assert int(fused_sample(logits, key, use_kernel=True,
+                                interpret=True, **kw)[0]) == host
+        seen.add(host)
+    assert len(seen) > 1            # ties actually get sampled
+
+
+def test_top_p_cumulative_boundary():
+    # probs [0.5, 0.3, 0.2], top_p=0.8: slot 2's (cum - p_i) hits 0.8
+    # EXACTLY — the strict `<` cutoff must exclude it in all three paths
+    probs = np.array([0.5, 0.3, 0.2], np.float64)
+    logits = jnp.asarray(np.log(probs), jnp.float32)[None]
+    kw = dict(temperature=1.0, top_p=0.8)
+    for seed in range(24):
+        key = jax.random.PRNGKey(seed)
+        host = int(sample(logits, key, **kw)[0])
+        assert host in (0, 1)
+        assert int(fused_sample(logits, key, use_kernel=False,
+                                **kw)[0]) == host
+        assert int(fused_sample(logits, key, use_kernel=True,
+                                interpret=True, **kw)[0]) == host
+
+
+def test_top_p_nonpositive_keeps_only_top_token():
+    # top_p <= 0: the forced top slot is the entire nucleus -> argmax
+    # regardless of key, in every lowering
+    logits = jax.random.normal(jax.random.PRNGKey(3), (3, 40), jnp.float32)
+    expect = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+    for tp in (0.0, -0.5):
+        kw = dict(temperature=1.0, top_p=tp)
+        for seed in range(4):
+            key = jax.random.PRNGKey(seed)
+            assert np.array_equal(np.asarray(sample(logits, key, **kw)),
+                                  expect)
+            assert np.array_equal(
+                np.asarray(fused_sample(logits, key, use_kernel=False,
+                                        **kw)), expect)
+            assert np.array_equal(
+                np.asarray(fused_sample(logits, key, use_kernel=True,
+                                        interpret=True, **kw)), expect)
+
+
+def test_greedy_ignores_key_and_matches_argmax():
+    logits = jax.random.normal(jax.random.PRNGKey(4), (5, 33), jnp.float32)
+    expect = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+    for seed in (0, 11):
+        out = fused_sample(logits, jax.random.PRNGKey(seed))
+        assert np.array_equal(np.asarray(out), expect)
+        assert out.dtype == jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# Engine level
+# ---------------------------------------------------------------------------
+
+
+def test_decode_sample_matches_decode_plus_host_sampler(small_lm):
+    _, model, params = small_lm
+    eng = Engine(model, RunConfig(cache_pad=16))
+    prompt = np.arange(2 * 6, dtype=np.int32).reshape(2, 6) % 250
+    tok = np.array([[3], [7]], np.int32)
+    kw = dict(temperature=0.8, top_k=6)
+    key = jax.random.PRNGKey(9)
+
+    # decode donates its cache: prefill twice so each path owns one
+    logits, cache = eng.prefill(params, prompt)
+    logits, _ = eng.decode(params, cache, tok)
+    host = np.asarray(sample(logits, key, **kw), np.int32)
+
+    _, cache2 = eng.prefill(params, prompt)
+    toks, _ = eng.decode_sample(params, cache2, tok, key, **kw)
+    assert toks.shape == (2,)
+    assert np.array_equal(np.asarray(toks, np.int32), host)
+
+
+def test_generate_fused_matches_host_mode(small_lm):
+    _, model, params = small_lm
+    eng = Engine(model, RunConfig(cache_pad=16))
+    prompt = (np.arange(2 * 5, dtype=np.int32).reshape(2, 5) * 7) % 250
+    for kw in (dict(), dict(temperature=0.9, top_k=5),
+               dict(temperature=1.0, top_p=0.85)):
+        host = eng.generate(params, prompt, max_new_tokens=6, seed=3, **kw)
+        fused = eng.generate(params, prompt, max_new_tokens=6, seed=3,
+                             fused_sampling=True, **kw)
+        assert np.array_equal(host, fused), kw
+
+
+# ---------------------------------------------------------------------------
+# Batcher level: stream parity + counter contract
+# ---------------------------------------------------------------------------
+
+
+def _reqs(rng, n=6):
+    return [Request(rid=i, prompt=rng.integers(0, 250, 4 + (i % 4) * 3
+                                               ).astype(np.int32),
+                    max_new_tokens=3 + (i % 3)) for i in range(n)]
+
+
+def _drained(model, params, fused, engine=None, **kw):
+    eng = engine or Engine(model, RunConfig(cache_pad=16))
+    bat = ContinuousBatcher(engine=eng, params=params, n_slots=3,
+                            fused_sampling=fused, temperature=0.9,
+                            top_k=6, seed=7, **kw)
+    for r in _reqs(np.random.default_rng(5)):
+        bat.submit(r)
+    bat.run()
+    return bat, eng
+
+
+def test_batcher_fused_stream_parity_and_counters(small_lm):
+    _, model, params = small_lm
+    host, _ = _drained(model, params, fused=False)
+    fused, feng = _drained(model, params, fused=True)
+
+    def streams(bat):
+        return {r.rid: tuple(r.generated) for r in bat.scheduler.completed}
+
+    assert streams(host) == streams(fused)   # same seed -> same tokens
+    # counter contract: fused keeps ONE decode dispatch per round and
+    # eliminates the sampler dispatch entirely
+    assert host.sampler_dispatches > 0
+    assert fused.sampler_dispatches == 0
+    assert fused.decode_dispatches == fused.rounds
+    assert host.decode_dispatches == host.rounds
+
+    # executable reuse: a second identical workload on the same engine
+    # compiles NOTHING new (shape buckets already warm)
+    before = feng.compile_count
+    _drained(model, params, fused=True, engine=feng)
+    assert feng.compile_count == before
+
+
+def test_paged_batcher_fused_stream_parity(small_lm):
+    _, model, params = small_lm
+    host, _ = _drained(model, params, fused=False, paged=True, page_size=8)
+    fused, _ = _drained(model, params, fused=True, paged=True, page_size=8)
+    assert host.paged and fused.paged
+    assert {r.rid: tuple(r.generated) for r in host.scheduler.completed} \
+        == {r.rid: tuple(r.generated) for r in fused.scheduler.completed}
+    assert fused.sampler_dispatches == 0
+    assert fused.decode_dispatches == fused.rounds
+
+
+def test_fused_requires_batched_mode(small_lm):
+    _, model, params = small_lm
+    eng = Engine(model, RunConfig(cache_pad=16))
+    with pytest.raises(ValueError, match="fused_sampling requires"):
+        ContinuousBatcher(engine=eng, params=params, batched=False,
+                          fused_sampling=True)

@@ -1,0 +1,266 @@
+"""int8 KV cache: quantization math, in-kernel dequant, engine parity.
+
+The contract under test, layer by layer: (1) symmetric per-token
+quantization obeys the |x - deq(x)| <= scale/2 bound that makes greedy
+decode safe; (2) the dense and paged Pallas quant kernels (interpret
+mode) match the dequantize-then-reference path at mixed ragged lengths
+INCLUDING the edges — an empty row (length 0) and a row at capacity
+(Smax - 1); (3) an int8 ``Engine`` emits the same greedy tokens as the
+bf16 one under teacher forcing, where any flip must sit on a genuine fp
+near-tie (bf16 top-2 logit gap below the measured cross-path logit
+delta — the PR-3 parity precedent); (4) the unsupported corners raise
+loudly (mesh, encoder-decoder, seq_shard, unknown dtype) instead of
+silently computing garbage; (5) cache specs carry the documented
+int8+fp32-scale layout in both the dense and paged families.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.kernels.decode_attention import (decode_attention,
+                                            decode_attention_ref,
+                                            dequantize_kv, gather_pages,
+                                            kv_dtype_of,
+                                            paged_decode_attention,
+                                            quantize_kv)
+from repro.models import RunConfig, attention, build
+from repro.serving import ContinuousBatcher, Engine, Request
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = configs.smoke("qwen2-7b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# ---------------------------------------------------------------------------
+# Quantization math
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 37, 2, 16),
+                          jnp.bfloat16) * 3.0
+    q, scale = quantize_kv(x)
+    assert q.dtype == jnp.int8 and q.shape == x.shape
+    assert scale.dtype == jnp.float32
+    assert scale.shape == x.shape[:-1] + (1,)
+    err = jnp.abs(x.astype(jnp.float32) - dequantize_kv(q, scale))
+    # symmetric round-to-nearest: within half a quantization step
+    assert bool(jnp.all(err <= scale / 2 + 1e-7))
+
+
+def test_quantize_all_zero_token_is_stable():
+    q, scale = quantize_kv(jnp.zeros((4, 8), jnp.bfloat16))
+    assert bool(jnp.all(q == 0))
+    assert bool(jnp.all(scale > 0))        # clamped, never a 0/0 NaN
+    assert bool(jnp.all(dequantize_kv(q, scale) == 0))
+
+
+def test_kv_dtype_of_discriminates_layer_layout():
+    kv = jnp.zeros((1, 2, 8, 2, 4), jnp.int8)
+    sc = jnp.zeros((1, 2, 8, 2, 1), jnp.float32)
+    assert kv_dtype_of({"k": kv, "v": kv,
+                        "k_scale": sc, "v_scale": sc}) == "int8"
+    assert kv_dtype_of({"k": kv, "v": kv}) == "bf16"
+    assert kv_dtype_of(jnp.zeros((2, 3))) == "bf16"   # SSM state leaves
+
+
+# ---------------------------------------------------------------------------
+# Quant kernels (interpret mode) vs dequantize-then-reference
+# ---------------------------------------------------------------------------
+
+
+def test_dense_quant_kernel_matches_dequant_ref_ragged():
+    b, h, kv, d, smax = 4, 4, 2, 64, 256
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (b, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(2), (b, smax, kv, d),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(3), (b, smax, kv, d),
+                          jnp.float32)
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    # edges included: an empty row and a row at capacity (Smax - 1)
+    lengths = jnp.asarray([0, 5, 100, smax - 1], jnp.int32)
+    out = decode_attention(q, kq, vq, lengths, k_scale=ks, v_scale=vs,
+                           block_t=128, interpret=True)
+    ref = decode_attention_ref(q, dequantize_kv(kq, ks),
+                               dequantize_kv(vq, vs), lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_quant_kernel_matches_dequant_ref_ragged():
+    b, h, kv, d, ps, pmax = 4, 4, 2, 64, 64, 4
+    n_pages = 1 + b * pmax
+    q = jax.random.normal(jax.random.PRNGKey(4), (b, h, d), jnp.float32)
+    kp = jax.random.normal(jax.random.PRNGKey(5), (n_pages, ps, kv, d),
+                           jnp.float32)
+    vp = jax.random.normal(jax.random.PRNGKey(6), (n_pages, ps, kv, d),
+                           jnp.float32)
+    kq, ks = quantize_kv(kp)
+    vq, vs = quantize_kv(vp)
+    table = jnp.arange(1, 1 + b * pmax,
+                       dtype=jnp.int32).reshape(b, pmax)
+    lengths = jnp.asarray([0, 7, 130, ps * pmax - 1], jnp.int32)
+    out = paged_decode_attention(q, kq, vq, lengths, table,
+                                 k_scale=ks, v_scale=vs, interpret=True)
+    ref = decode_attention_ref(
+        q, gather_pages(dequantize_kv(kq, ks), table),
+        gather_pages(dequantize_kv(vq, vs), table), lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Engine: int8 vs bf16 greedy decode parity (teacher-forced)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_int8_matches_bf16_teacher_forced_ragged(small_lm):
+    """Shared batched cache with rows admitted at MIXED lengths: decode
+    both engines on the bf16 token stream; every argmax flip must be a
+    genuine fp near-tie (bf16 top-2 gap <= 2x the cross-path logit
+    delta), so quantization never changes a CONFIDENT prediction."""
+    _, model, params = small_lm
+    n_slots, max_len, n_steps = 3, 48, 10
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, 250, n).astype(np.int32)
+               for n in (3, 9, 17)]
+
+    caches, engines = {}, {}
+    for dtype in ("bf16", "int8"):
+        eng = Engine(model, RunConfig(cache_pad=16, kv_dtype=dtype))
+        cache = eng.new_cache(n_slots, max_len)
+        for row, p in enumerate(prompts):
+            _, cache = eng.prefill_into(params, cache, row, p[None],
+                                        max_len=max_len)
+        engines[dtype], caches[dtype] = eng, cache
+
+    if "int8" in repr(jax.tree.leaves(caches["bf16"])):  # sanity
+        pytest.fail("bf16 cache unexpectedly carries int8 leaves")
+    assert any(l.dtype == jnp.int8
+               for l in jax.tree.leaves(caches["int8"]))
+
+    tok = np.zeros((n_slots, 1), np.int32)
+    for step in range(n_steps):
+        l16, caches["bf16"] = engines["bf16"].decode(
+            params, caches["bf16"], tok)
+        l8, caches["int8"] = engines["int8"].decode(
+            params, caches["int8"], tok)
+        l16 = np.asarray(l16, np.float32)
+        l8 = np.asarray(l8, np.float32)
+        delta = np.abs(l16 - l8).max()
+        for row in range(n_slots):
+            a16, a8 = int(l16[row].argmax()), int(l8[row].argmax())
+            if a16 != a8:
+                top2 = np.sort(l16[row])[-2:]
+                gap = float(top2[1] - top2[0])
+                assert gap <= 2 * delta, (
+                    f"step {step} row {row}: int8 flipped a confident "
+                    f"argmax (gap {gap:.4f} > 2*delta {2*delta:.4f})")
+        tok[:, 0] = l16.argmax(-1)          # teacher-force bf16 tokens
+
+
+def test_paged_int8_batcher_flow_completes(small_lm):
+    cfg, model, params = small_lm
+    eng = Engine(model, RunConfig(cache_pad=16, kv_dtype="int8"))
+    bat = ContinuousBatcher(engine=eng, params=params, n_slots=2,
+                            paged=True, page_size=8)
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 250, 5 + i * 4
+                                               ).astype(np.int32),
+                    max_new_tokens=4) for i in range(4)]
+    for r in reqs:
+        bat.submit(r)
+    done = bat.run()
+    assert bat.paged                         # did not fall back to dense
+    assert len(done) == 4
+    for r in done:
+        assert len(r.generated) == 4
+        assert all(0 <= t < cfg.vocab_size for t in r.generated)
+    # the paged pools really are int8 + fp32 scale pools
+    leaves = jax.tree.leaves(bat.cache)
+    assert any(l.dtype == jnp.int8 for l in leaves)
+    assert any(l.dtype == jnp.float32 and l.shape[-1] == 1
+               for l in leaves)
+
+
+# ---------------------------------------------------------------------------
+# Guard rails
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_kv_dtype_raises(small_lm):
+    _, model, _ = small_lm
+    with pytest.raises(ValueError, match="kv_dtype"):
+        Engine(model, RunConfig(kv_dtype="fp4"))
+
+
+def test_int8_under_mesh_raises(small_lm):
+    _, model, _ = small_lm
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="single-host"):
+        Engine(model, RunConfig(kv_dtype="int8"), mesh=mesh)
+
+
+def test_int8_encdec_raises():
+    model = build(configs.smoke("whisper-base"))
+    with pytest.raises(ValueError, match="encoder-decoder"):
+        Engine(model, RunConfig(kv_dtype="int8"))
+    with pytest.raises(ValueError, match="int8"):
+        model.cache_specs(1, 16, 8, kv_dtype="int8")
+
+
+def test_int8_seq_shard_attend_raises():
+    b, smax, kv, d = 1, 8, 2, 4
+    q = jnp.zeros((b, 1, 2, d))
+    k = jnp.zeros((b, smax, kv, d), jnp.int8)
+    sc = jnp.zeros((b, smax, kv, 1), jnp.float32)
+    with pytest.raises(ValueError, match="seq_shard"):
+        attention.attend_decode(q, k, k, jnp.int32(0), k_scale=sc,
+                                v_scale=sc, impl="seq_shard")
+
+
+# ---------------------------------------------------------------------------
+# Cache layout
+# ---------------------------------------------------------------------------
+
+
+def test_cache_specs_int8_layout(small_lm):
+    cfg, model, _ = small_lm
+    specs = model.cache_specs(2, 32, kv_dtype="int8")
+    attn = [l for l in specs.layers if isinstance(l, dict)]
+    assert attn, "smoke config has attention layers"
+    for layer in attn:
+        assert set(layer) == {"k", "v", "k_scale", "v_scale"}
+        assert layer["k"].dtype == jnp.int8
+        assert layer["k_scale"].dtype == jnp.float32
+        assert layer["k_scale"].shape == layer["k"].shape[:-1] + (1,)
+    # bf16 default is untouched: two-key layers, bf16 leaves
+    for layer in model.cache_specs(2, 32).layers:
+        if isinstance(layer, dict):
+            assert set(layer) == {"k", "v"}
+            assert layer["k"].dtype == jnp.bfloat16
+
+
+def test_paged_cache_specs_int8_layout(small_lm):
+    cfg, model, _ = small_lm
+    specs = model.paged_cache_specs(2, 9, 8, 4, kv_dtype="int8")
+    for layer in specs.layers:
+        if isinstance(layer, dict) and "k_scale" in layer:
+            assert layer["k"].dtype == jnp.int8
+            assert layer["k"].shape[:2] == (cfg.n_groups, 9)  # (G, P, ...)
+            assert layer["k_scale"].shape == \
+                layer["k"].shape[:-1] + (1,)
+            break
+    else:
+        pytest.fail("no int8 attention layer in paged specs")
