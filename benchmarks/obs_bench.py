@@ -1,0 +1,223 @@
+"""Observability overhead benchmark: the layer must be free to leave on.
+
+Records BENCH_9.json. Three claims, one record:
+
+  * OVERHEAD — the same virtual-clock traffic driven through
+    ``EventRouter.run_events()`` with observability OFF (obs=None) and
+    ON (full metric catalog + ``TraceRecorder``); CPU seconds per run
+    (``REPS`` back-to-back pairs, engines pre-warmed, median paired
+    on/off ratio — see ``_timed_pair``) give tok/s both ways. The
+    claim: the ON path costs < 5%.
+  * PARITY WITH TRACING — with the tracer attached, the sync and event
+    drivers still produce identical report summaries and per-request
+    token streams (the tentpole's inertness contract under load), and
+    two same-seed traced runs serialize BYTE-IDENTICAL JSONL.
+  * LINT — the Prometheus text ``GET /metrics`` would serve after the
+    run re-parses clean under ``repro.obs.promlint.lint_prometheus``.
+
+CI greps the claims block into the job summary next to BENCH_3–8; the
+pinned test versions live in tests/test_obs.py.
+"""
+from __future__ import annotations
+
+import gc
+import json
+import time
+
+import jax
+
+from repro import configs
+from repro.core import LatencyModel
+from repro.models import RunConfig, build
+from repro.obs import Observability, TraceRecorder, lint_prometheus
+from repro.router import (EventRouter, QueueDepthPolicy, ReplicaConfig,
+                          ReplicaPool, Router, make_requests,
+                          poisson_arrivals)
+from repro.serving import Engine
+
+BENCH_RECORD = "BENCH_9.json"
+
+PROMPT_LEN = 16
+MAX_NEW = 8
+N_SLOTS = 4
+RATE_RPS = 30.0
+HORIZON_S = 4.0
+PER_TOKEN_S = 0.02
+COLD_START_S = 0.5
+SEED = 0
+REPS = 15
+
+LAST_RUN: dict = {}
+
+
+def _router(engine, params, cfg, cls=EventRouter, obs=None):
+    arrivals = poisson_arrivals(RATE_RPS, HORIZON_S, SEED)
+    reqs = make_requests(arrivals, prompt_len=PROMPT_LEN,
+                         max_new_tokens=MAX_NEW, vocab=cfg.vocab_size,
+                         seed=SEED)
+    pool = ReplicaPool(engine, params,
+                       ReplicaConfig(n_slots=N_SLOTS,
+                                     max_len=PROMPT_LEN + MAX_NEW + 8),
+                       lat=LatencyModel(cold_start_s=COLD_START_S,
+                                        per_item_s=PER_TOKEN_S))
+    return cls(pool, QueueDepthPolicy(max_replicas=4), reqs,
+               traffic_name="obs_bench", obs=obs)
+
+
+def _one_run(engine, params, cfg, obs):
+    """One timed event-driven run. CPU time (``time.process_time``),
+    not wall time: both arms dispatch the identical executable
+    sequence, so the difference IS the hook cost — and CPU time is
+    immune to the host-load jitter that dwarfs a few-percent effect in
+    wall clocks on shared CI runners. ``gc.collect()`` first, then gc
+    DISABLED inside the timed region, so neither arm pays a collection
+    triggered by the other's allocation debt."""
+    router = _router(engine, params, cfg, obs=obs)
+    gc.collect()
+    gc.disable()
+    try:
+        t0 = time.process_time()
+        report = router.run_events()
+        dt = time.process_time() - t0
+    finally:
+        gc.enable()
+    return dt, report
+
+
+def _timed_pair(engine, params, cfg):
+    """Overhead estimate robust to CPU-frequency wander: each rep runs
+    the two arms back-to-back (order ALTERNATING per rep, so drift
+    within a pair cancels across reps) and contributes one paired
+    ratio on/off; the estimate is the MEDIAN ratio. A min-of-reps over
+    raw times is fragile here — whichever arm's reps happen to
+    coincide with a turbo window wins by several percent, which is the
+    size of the effect being measured. Paired adjacent ratios see the
+    same frequency regime in both arms."""
+    ratios = []
+    off_s = on_s = float("inf")
+    rep_off = rep_on = obs = None
+    for i in range(REPS):
+        o = Observability(tracer=TraceRecorder())
+        if i % 2 == 0:
+            s_off, rep_off = _one_run(engine, params, cfg, None)
+            s_on, rep_on = _one_run(engine, params, cfg, o)
+        else:
+            s_on, rep_on = _one_run(engine, params, cfg, o)
+            s_off, rep_off = _one_run(engine, params, cfg, None)
+        ratios.append(s_on / s_off)
+        off_s = min(off_s, s_off)
+        if s_on < on_s:
+            on_s, obs = s_on, o
+    ratios.sort()
+    median_ratio = ratios[len(ratios) // 2]
+    return off_s, rep_off, on_s, rep_on, obs, median_ratio
+
+
+def _streams(router):
+    return {r.rid: (list(r.generated), r.first_token_t, r.finish_t)
+            for r in router.completed}
+
+
+def bench() -> list:
+    cfg = configs.smoke("qwen2-7b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(SEED))
+    engine = Engine(model, RunConfig(cache_pad=16))
+
+    # warm the executable buckets so neither arm pays first-compile
+    _router(engine, params, cfg).run_events()
+
+    # 1. overhead: obs off vs obs on (metrics + tracer), paired reps
+    (off_s, rep_off, on_s, rep_on, obs,
+     median_ratio) = _timed_pair(engine, params, cfg)
+    toks = rep_on.tokens_out
+    tok_s_off = toks / off_s
+    tok_s_on = toks / on_s
+    overhead_pct = 100.0 * (median_ratio - 1.0)
+
+    rows = [(
+        "obs/overhead",
+        on_s * 1e6 / max(toks, 1),
+        f"{tok_s_on:.0f} cpu-tok/s on vs {tok_s_off:.0f} off"
+        f" median-paired overhead {overhead_pct:+.1f}% (<5% claim)"
+        f" {len(obs.tracer)} trace events")]
+
+    # identical outcomes both arms (inertness under the benchmark load)
+    inert = rep_off.summary() == rep_on.summary()
+
+    # 2. parity with tracing enabled: sync vs event, both traced
+    sync = _router(engine, params, cfg, cls=Router,
+                   obs=Observability(tracer=TraceRecorder()))
+    rep_sync = sync.run()
+    event = _router(engine, params, cfg,
+                    obs=Observability(tracer=TraceRecorder()))
+    rep_event = event.run_events()
+    parity = (rep_sync.summary() == rep_event.summary()
+              and _streams(sync) == _streams(event))
+    trace_deterministic = (event.obs.tracer.dumps()
+                           == obs.tracer.dumps())
+    rows.append((
+        "obs/parity_traced",
+        0.0,
+        f"parity {'OK' if parity else 'FAIL'}"
+        f" traced {rep_event.n_completed} reqs"
+        f" byte-deterministic trace"
+        f" {'OK' if trace_deterministic else 'FAIL'}"))
+
+    # 3. the Prometheus scrape re-parses clean
+    text = obs.registry.render()
+    lint_errors = lint_prometheus(text)
+    rows.append((
+        "obs/prometheus_lint",
+        0.0,
+        f"{len(text.splitlines())} lines"
+        f" {len(lint_errors)} lint errors"
+        f" {'OK' if not lint_errors else 'FAIL'}"))
+
+    LAST_RUN.clear()
+    LAST_RUN.update({
+        "claims": {
+            "tokens_per_s_obs_off": round(tok_s_off, 1),
+            "tokens_per_s_obs_on": round(tok_s_on, 1),
+            "overhead_pct": round(overhead_pct, 2),
+            "overhead_under_5pct": overhead_pct < 5.0,
+            "obs_on_vs_off_summaries_equal": inert,
+            "parity_sync_event_with_tracing": parity,
+            "trace_byte_deterministic": trace_deterministic,
+            "n_trace_events": len(obs.tracer),
+            "prometheus_lint_errors": len(lint_errors),
+            "prometheus_lint_pass": not lint_errors,
+            "n_requests": rep_on.n_completed,
+        },
+    })
+    return rows
+
+
+def record(rows: list) -> dict:
+    return {
+        "benchmark": "obs_bench",
+        "device_count": jax.device_count(),
+        "backend": jax.default_backend(),
+        "config": {"prompt_len": PROMPT_LEN, "max_new_tokens": MAX_NEW,
+                   "n_slots": N_SLOTS, "rate_rps": RATE_RPS,
+                   "horizon_s": HORIZON_S, "per_token_s": PER_TOKEN_S,
+                   "cold_start_s": COLD_START_S, "seed": SEED,
+                   "reps": REPS},
+        "rows": [{"name": n, "us_per_call": round(us, 2), "derived": d}
+                 for n, us, d in rows],
+        "claims": LAST_RUN.get("claims", {}),
+    }
+
+
+if __name__ == "__main__":
+    import sys
+    out_rows = bench()
+    for name, us, derived in out_rows:
+        print(f"{name},{us:.2f},{derived}")
+    claims = LAST_RUN.get("claims", {})
+    if claims:
+        print(f"# claims: {json.dumps(claims)}", file=sys.stderr)
+    if len(sys.argv) > 1:
+        with open(sys.argv[1], "w") as f:
+            json.dump(record(out_rows), f, indent=2)
+            f.write("\n")

@@ -158,6 +158,7 @@ def run_http(args, mesh):
     import asyncio
 
     from repro.core import LatencyModel
+    from repro.obs import Observability, TraceRecorder
     from repro.router import (EventRouter, HttpFrontDoor, QueueConfig,
                               QueueDepthPolicy, ReplicaConfig, ReplicaPool,
                               WallClock)
@@ -178,23 +179,31 @@ def run_http(args, mesh):
         lat=LatencyModel(cold_start_s=args.cold_start, per_item_s=None),
         injector=FaultInjector(seed=args.seed, crash_prob=args.crash_prob,
                                straggler_prob=args.straggler_prob))
+    obs = Observability(
+        tracer=TraceRecorder() if args.trace else None)
     router = EventRouter(
         pool, QueueDepthPolicy(max_replicas=args.max_replicas),
         clock=WallClock(),
         queue_cfg=QueueConfig(max_depth=args.queue_cap,
                               default_deadline_s=args.deadline),
-        traffic_name="http")
+        traffic_name="http", obs=obs)
     door = HttpFrontDoor(router, host=args.host, port=args.port)
 
     async def _serve():
         await door.start()
         print(f"== serving on http://{args.host}:{door.port} — "
-              f"POST /v1/generate, GET /healthz, GET /metrics ==")
+              f"POST /v1/generate, GET /healthz, GET /metrics "
+              f"(Prometheus), GET /metrics.json ==")
         try:
             await asyncio.Event().wait()      # until Ctrl-C
         finally:
             await door.close()
             print(router.report().format_line())
+            if args.trace:
+                n = obs.tracer.dump(args.trace)
+                print(f"== trace: {n} events -> {args.trace} "
+                      f"(analyze: python tools/trace_report.py "
+                      f"{args.trace}) ==")
 
     try:
         asyncio.run(_serve())
@@ -283,6 +292,10 @@ def main(argv=None):
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8765,
                     help="HTTP front-door port (0 = ephemeral)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record per-request trace spans (repro.obs "
+                         "JSONL) and write them here on shutdown; "
+                         "analyze with tools/trace_report.py")
     args = ap.parse_args(argv)
 
     mesh = None

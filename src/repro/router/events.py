@@ -212,7 +212,8 @@ class RouterCore:
                  aws: AWSPriceBook = AWSPriceBook(),
                  tpu: TPUPriceBook = TPUPriceBook(),
                  traffic_name: str = "",
-                 clock: Optional[Any] = None):
+                 clock: Optional[Any] = None,
+                 obs: Optional[Any] = None):
         self.pool = pool
         self.policy = policy
         self.queue = ArrivalQueue(queue_cfg)
@@ -221,6 +222,17 @@ class RouterCore:
         self.tpu = tpu
         self.traffic_name = traffic_name
         self._clock = clock if clock is not None else VirtualClock()
+        # observability is OPT-IN and inert: obs=None (the default) skips
+        # every hook; with an Observability attached the hooks only READ
+        # state the round already computed — token streams and summaries
+        # are bit-identical either way (tests/test_obs.py).
+        self.obs = None
+        self._n_rej_obs = 0            # terminal-outcome diff cursors
+        self._n_exp_obs = 0
+        self._prev_disp: dict = {}     # replica_id -> counter snapshot
+        self._prev_compiles = self._compile_count()
+        if obs is not None:
+            self.attach_obs(obs)
         # resolve the round-time mode ONCE (see the module docstring):
         # calibrated > modeled (hand-set per_item_s) > measured.
         cal = cfg.calibration
@@ -262,6 +274,16 @@ class RouterCore:
         self._tok_events = deque()     # (t, n) recent token production
         self.events: List[dict] = []   # observability, orchestrator-style
 
+    def attach_obs(self, obs: Any) -> Any:
+        """Attach an ``Observability`` (registry + optional tracer) to
+        this core and its pool. The HTTP front door calls this when the
+        router was built without one, so ``GET /metrics`` always has a
+        registry behind it."""
+        self.obs = obs
+        if getattr(self.pool, "obs", None) is None:
+            self.pool.obs = obs
+        return obs
+
     # -- the clock -------------------------------------------------------
 
     @property
@@ -276,6 +298,50 @@ class RouterCore:
 
     def _log(self, kind: str, **kw):
         self.events.append({"t": round(self.clock, 4), "kind": kind, **kw})
+
+    def _compile_count(self) -> int:
+        """Executable-bucket compiles across whatever engines the pool
+        drives (one shared engine, or every built slice engine)."""
+        return (self.pool.slices.compile_count() if self.pool.slices
+                else self.pool.engine.compile_count)
+
+    def _obs_sync(self) -> None:
+        """Gauge refresh + terminal-outcome diff. Rejections and
+        expiries land in the queue's append-only lists from several
+        code paths (submit refusal, deadline pops, capacity rejections,
+        crash requeues) — diffing those lists here is what keeps the
+        ``repro_requests_total`` partition exactly equal to
+        ``RouterReport``'s counts (the property-test law)."""
+        obs = self.obs
+        if obs is None:
+            return
+        q = self.queue
+        while self._n_rej_obs < len(q.rejected):
+            req = q.rejected[self._n_rej_obs]
+            obs.m_requests.inc(outcome="rejected")
+            obs.trace("reject", self.clock, rid=req.rid)
+            self._n_rej_obs += 1
+        while self._n_exp_obs < len(q.expired):
+            req = q.expired[self._n_exp_obs]
+            obs.m_requests.inc(outcome="expired")
+            obs.trace("expire", self.clock, rid=req.rid)
+            self._n_exp_obs += 1
+        obs.m_queue_depth.set(q.depth)
+        obs.m_clock_s.set(self.clock)
+        obs.m_cost_usd.set(self._cost_so_far())
+        counts: dict = {}
+        for r in self.pool.replicas:
+            counts[r.state] = counts.get(r.state, 0) + 1
+        for state in ("starting", "ready", "draining", "dead", "retired"):
+            obs.m_replicas.set(counts.get(state, 0), state=state)
+        for r in self.pool.replicas:
+            if r.state not in ("starting", "ready", "draining"):
+                continue
+            alloc = getattr(r.batcher, "allocator", None)
+            if alloc is not None:
+                obs.m_pages.set(alloc.n_free, state="free")
+                obs.m_pages.set(alloc.n_live, state="live")
+                break
 
     # -- estimators / snapshot ------------------------------------------
 
@@ -328,6 +394,8 @@ class RouterCore:
         self._arrivals.append(req.arrival_t)
         if not self.queue.submit(req, self.clock):
             self._log("reject", rid=req.rid)
+        elif self.obs is not None:
+            self.obs.trace("queued", req.arrival_t, rid=req.rid)
 
     def _control(self) -> None:
         """One control step: autoscale on the current snapshot, surface
@@ -336,8 +404,14 @@ class RouterCore:
         target = self.policy.target(self.snapshot())
         before = len(pool.live())
         pool.scale_to(target, self.clock)
-        if len(pool.live()) != before:
-            self._log("scale", target=target, live=len(pool.live()))
+        after = len(pool.live())
+        if after != before:
+            self._log("scale", target=target, live=after)
+            if self.obs is not None:
+                self.obs.m_scale_events.inc(
+                    direction="up" if after > before else "down")
+                self.obs.trace("scale", self.clock, target=target,
+                               live=after)
         pool.poll_ready(self.clock)
         self.peak_replicas = max(self.peak_replicas, len(pool.live()))
         for r in pool.ready():
@@ -346,6 +420,11 @@ class RouterCore:
                 if req is None:
                     break
                 r.batcher.submit(req)
+                if self.obs is not None:
+                    self.obs.m_admitted.inc()
+                    self.obs.trace("admitted", self.clock, rid=req.rid,
+                                   replica=r.replica_id)
+        self._obs_sync()
 
     # -- one replica round ----------------------------------------------
 
@@ -389,6 +468,38 @@ class RouterCore:
         r.busy_s += round_s            # crashed rounds are billed too
         done_now = r.drain_completed()
 
+        obs = self.obs
+        if obs is not None:
+            obs.m_busy_s.inc(round_s)
+            obs.m_round.observe(round_s)
+            bucket_s = r.batcher.take_bucket_s()
+            for b, s in bucket_s.items():
+                if s > 0.0:
+                    obs.m_bucket_s.inc(s, bucket=b)
+            dd, sd = r.batcher.decode_dispatches, r.batcher.sampler_dispatches
+            oe = r.batcher.on_token_errors
+            pd, ps, po = self._prev_disp.get(r.replica_id, (0, 0, 0))
+            obs.m_decode_dispatches.inc(dd - pd)
+            obs.m_sampler_dispatches.inc(sd - ps)
+            if oe > po:
+                obs.m_on_token_errors.inc(oe - po)
+            self._prev_disp[r.replica_id] = (dd, sd, oe)
+            cc = self._compile_count()
+            if cc > self._prev_compiles:
+                obs.m_compile_misses.inc(cc - self._prev_compiles)
+            self._prev_compiles = cc
+            # the per-round trace event: measured wall buckets only ride
+            # on a wall clock — a VirtualClock trace stays a pure
+            # function of the seed (bit-deterministic), so it carries
+            # modeled round_s and no host-measured numbers
+            extra = ({"buckets": {b: round(s, 9)
+                                  for b, s in bucket_s.items()}}
+                     if not self._clock.virtual else {})
+            obs.trace("round", t0, replica=r.replica_id,
+                      round_s=round(round_s, 9), n_active=len(pre_inflight),
+                      crashed=crashed, rids=[q.rid for q in pre_inflight],
+                      **extra)
+
         # a request the replica's cache can never hold is rejected at
         # admission (the batcher keeps the round alive — see
         # ContinuousBatcher); count it with the queue's rejections. This
@@ -417,16 +528,29 @@ class RouterCore:
             n_req = self.queue.requeue(lost, t0 + round_s)
             self._log("crash", replica=r.replica_id, requeued=n_req,
                       expired=len(lost) - n_req)
+            if obs is not None:
+                obs.trace("replica_crash", t0 + round_s,
+                          replica=r.replica_id, requeued=n_req,
+                          expired=len(lost) - n_req)
             return round_s
 
         t_visible = t0 + round_s
         # first tokens are stamped at their PREFILL event (mid-round),
         # exactly once — not at the round boundary
         timed = []
+        decode_rids: List[int] = []
         for ev in log.events:
             t_ev = t0 + self._event_offset(ev, log, round_s)
             if ev.prefill:
-                record_first_token(ev.req, t_ev)
+                stamped = record_first_token(ev.req, t_ev)
+                if obs is not None:
+                    obs.trace("prefill", t_ev, rid=ev.req.rid,
+                              replica=r.replica_id)
+                    if stamped:
+                        obs.m_ttft.observe(t_ev - ev.req.arrival_t)
+                        obs.trace("first_token", t_ev, rid=ev.req.rid)
+            elif obs is not None and ev.req.rid not in decode_rids:
+                decode_rids.append(ev.req.rid)
             timed.append((ev.req, ev.tok, t_ev, ev.prefill))
         produced = (sum(len(q.generated) for q in r.inflight())
                     + sum(len(q.generated) for q in done_now)
@@ -437,10 +561,25 @@ class RouterCore:
         for q in r.inflight() + done_now:
             if q.first_token_t is None and q.generated:
                 # fallback for batchers driven without the callback
-                record_first_token(q, t_visible)
+                if record_first_token(q, t_visible) and obs is not None:
+                    obs.m_ttft.observe(t_visible - q.arrival_t)
+                    obs.trace("first_token", t_visible, rid=q.rid)
+        if obs is not None:
+            if produced:
+                obs.m_tokens.inc(produced)
+            for rid in decode_rids:
+                obs.trace("decode_round", t_visible, rid=rid,
+                          replica=r.replica_id)
         for q in done_now:
             q.finish_t = t_visible
             self.completed.append(q)
+            if obs is not None:
+                obs.m_requests.inc(outcome="completed")
+                obs.trace("finish", t_visible, rid=q.rid,
+                          n_tokens=len(q.generated))
+                if q.first_token_t is not None and len(q.generated) > 1:
+                    obs.m_tpot.observe((t_visible - q.first_token_t)
+                                       / (len(q.generated) - 1))
         self._emit_round(timed)
         return round_s
 
@@ -477,6 +616,7 @@ class RouterCore:
     # -- final accounting -----------------------------------------------
 
     def _report(self) -> RouterReport:
+        self._obs_sync()     # terminal diffs through the final round
         lats = request_latencies(self.completed)
         n_sub = self.queue.n_submitted
         good = sum(

@@ -27,7 +27,13 @@ streaming NDJSON token events over chunked transfer encoding.
     n, "priority": p, "deadline_s": s}`` → one chunk per token
     ``{"token", "t", "prefill", "done"}`` + a final
     ``{"event": "end", ...}`` stats chunk.
-  * ``GET /healthz``, ``GET /metrics`` — liveness + live counters.
+  * ``GET /healthz`` — liveness + READINESS (false until a serving
+    replica exists and its engine is warm — see
+    ``EventRouter.readiness``).
+  * ``GET /metrics`` — Prometheus text exposition rendered from the
+    ``repro.obs`` registry (metric catalog: docs/OBSERVABILITY.md).
+  * ``GET /metrics.json`` — the legacy JSON counter blob, now served
+    O(1) from live state + registry histograms (``live_stats``).
 
 A mid-flight client disconnect cancels its request —
 ``EventRouter.cancel`` frees the slot's cache row via
@@ -48,9 +54,10 @@ from typing import Any, Dict, Optional, Tuple
 import numpy as np
 
 from repro.core.cost_model import AWSPriceBook, TPUPriceBook
+from repro.obs import Observability
 from repro.router.events import (ARRIVAL, EventQueue, RouterConfig,
                                  RouterCore, VirtualClock)
-from repro.router.metrics import RouterReport, percentile
+from repro.router.metrics import RouterReport
 from repro.router.policy import AutoscalePolicy
 from repro.router.pool import ReplicaPool
 from repro.router.queue import QueueConfig
@@ -67,9 +74,11 @@ class EventRouter(RouterCore):
                  aws: AWSPriceBook = AWSPriceBook(),
                  tpu: TPUPriceBook = TPUPriceBook(),
                  traffic_name: str = "",
-                 clock: Optional[Any] = None):
+                 clock: Optional[Any] = None,
+                 obs: Optional[Observability] = None):
         super().__init__(pool, policy, traffic, queue_cfg, cfg, aws, tpu,
-                         traffic_name, clock=clock or VirtualClock())
+                         traffic_name, clock=clock or VirtualClock(),
+                         obs=obs)
         self._intake: deque = deque()        # live submissions, pre-queue
         self._streams: Dict[int, asyncio.Queue] = {}   # id(req) -> stream
         self._rid_seq = len(traffic)
@@ -155,6 +164,9 @@ class EventRouter(RouterCore):
         if found:
             self.n_cancelled += 1
             self._log("cancel", rid=req.rid)
+            if self.obs is not None:
+                self.obs.m_requests.inc(outcome="cancelled")
+                self.obs.trace("cancel", self.clock, rid=req.rid)
             self._close_stream(req)
             if self._wake is not None:
                 self._wake.set()
@@ -213,22 +225,41 @@ class EventRouter(RouterCore):
         return self._report()
 
     def live_stats(self) -> Dict[str, Any]:
-        """Cheap counters for ``GET /metrics`` (no percentile math on
-        the hot path beyond what the report already does)."""
-        rep = self._report()
+        """The legacy JSON scrape shape (``GET /metrics.json``), served
+        in O(1) from live counters and registry histograms — NOT from
+        ``_report()``, which walks every completed request and runs
+        exact percentile math per call (the hot-path bug this replaces).
+        The p50s are the registry's bucket-boundary estimates; exact
+        percentiles still come from ``report()`` at end of run."""
+        obs = self.obs if self.obs is not None else self.attach_obs(
+            Observability())
         return {
             "clock_s": round(self.clock, 4),
             "queue_depth": self.queue.depth,
             "n_replicas": len(self.pool.live()),
-            "n_completed": rep.n_completed,
-            "n_cancelled": rep.n_cancelled,
-            "n_rejected": rep.n_rejected,
-            "n_expired": rep.n_expired,
-            "tokens_out": rep.tokens_out,
-            "ttft_p50_s": round(percentile(rep.ttft_s, 50), 4),
-            "tpot_p50_s": round(percentile(rep.tpot_s, 50), 4),
-            "cost_usd": round(rep.cost_usd, 8),
+            "n_completed": len(self.completed),
+            "n_cancelled": self.n_cancelled,
+            "n_rejected": len(self.queue.rejected),
+            "n_expired": len(self.queue.expired),
+            "tokens_out": self.pool.tokens_out(),
+            "ttft_p50_s": round(obs.m_ttft.quantile(0.5), 4),
+            "tpot_p50_s": round(obs.m_tpot.quantile(0.5), 4),
+            "cost_usd": round(self._cost_so_far(), 8),
         }
+
+    def readiness(self) -> Dict[str, Any]:
+        """``GET /healthz`` body: liveness (``ok``) plus READINESS —
+        false through the cold-start window, true once the pool has a
+        replica in a serving state AND that replica's engine has at
+        least one executable bucket compiled (``Engine.warm``): the
+        next request is served without a spawn or first-compile stall."""
+        serving = [r for r in self.pool.live()
+                   if r.state in ("ready", "draining")]
+        warm = any(getattr(r.batcher.engine, "warm", False)
+                   for r in serving)
+        return {"ok": True, "ready": warm,
+                "n_replicas": len(self.pool.live()),
+                "n_ready": len(serving)}
 
     # -- streaming plumbing ----------------------------------------------
 
@@ -272,6 +303,11 @@ class HttpFrontDoor:
     def __init__(self, router: EventRouter, host: str = "127.0.0.1",
                  port: int = 0):
         self.router = router
+        # the front door always serves Prometheus text, so a router
+        # built without observability gets a metrics-only one here
+        if router.obs is None:
+            router.attach_obs(Observability())
+        self.obs = router.obs
         self.host = host
         self.port = port
         self._server: Optional[asyncio.AbstractServer] = None
@@ -296,6 +332,7 @@ class HttpFrontDoor:
 
     async def _handle(self, reader: asyncio.StreamReader,
                       writer: asyncio.StreamWriter) -> None:
+        self.obs.m_http_inflight.inc()
         try:
             line = await reader.readline()
             if not line:
@@ -312,8 +349,11 @@ class HttpFrontDoor:
                 k, _, v = h.decode("latin-1").partition(":")
                 headers[k.strip().lower()] = v.strip()
             if method == "GET" and path == "/healthz":
-                await self._json(writer, 200, {"ok": True})
+                await self._json(writer, 200, self.router.readiness())
             elif method == "GET" and path == "/metrics":
+                await self._text(writer, 200,
+                                 self.obs.registry.render())
+            elif method == "GET" and path == "/metrics.json":
                 await self._json(writer, 200, self.router.live_stats())
             elif method == "POST" and path == "/v1/generate":
                 await self._generate(reader, writer, headers)
@@ -323,6 +363,7 @@ class HttpFrontDoor:
                 asyncio.IncompleteReadError):
             pass
         finally:
+            self.obs.m_http_inflight.dec()
             try:
                 writer.close()
                 await writer.wait_closed()
@@ -365,6 +406,7 @@ class HttpFrontDoor:
                     await writer.drain()
                 else:                      # client disconnected
                     getter.cancel()
+                    self.obs.m_http_disconnects.inc()
                     self.router.cancel(req)
                     return
             self._chunk(writer, {
@@ -378,6 +420,7 @@ class HttpFrontDoor:
             writer.write(b"0\r\n\r\n")
             await writer.drain()
         except (ConnectionResetError, BrokenPipeError):
+            self.obs.m_http_disconnects.inc()
             self.router.cancel(req)
         finally:
             watchdog.cancel()
@@ -399,4 +442,16 @@ class HttpFrontDoor:
                      f"Content-Type: application/json\r\n"
                      f"Content-Length: {len(body)}\r\n"
                      f"Connection: close\r\n\r\n".encode() + body)
+        await writer.drain()
+
+    @staticmethod
+    async def _text(writer: asyncio.StreamWriter, status: int,
+                    text: str) -> None:
+        """Prometheus text exposition (``GET /metrics``)."""
+        body = text.encode()
+        writer.write(
+            f"HTTP/1.1 {status} OK\r\n"
+            f"Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n"
+            f"Content-Length: {len(body)}\r\n"
+            f"Connection: close\r\n\r\n".encode() + body)
         await writer.drain()

@@ -230,6 +230,10 @@ class ReplicaPool:
         self.replicas: List[Replica] = []   # every replica ever (billing)
         self.n_spawns = 0
         self.n_crashes = 0
+        # set by RouterCore when an Observability is attached; the pool
+        # only ever reads it behind `is not None` guards, so a bare pool
+        # (tests, benchmarks) stays exactly as before
+        self.obs = None
 
     def capacity(self) -> Optional[int]:
         """Max live replicas (``None`` = unbounded shared-engine mode)."""
@@ -266,11 +270,19 @@ class ReplicaPool:
                     ready_t=now + self.cold_start_s(), slice_idx=slice_idx)
         self.replicas.append(r)
         self.n_spawns += 1
+        if self.obs is not None:
+            self.obs.m_cold_starts.inc()
+            self.obs.trace("replica_start", now, replica=r.replica_id,
+                           ready_t=round(r.ready_t, 9))
         return r
 
     def poll_ready(self, now: float):
         for r in self.replicas:
+            was = r.state
             r.poll_ready(now)
+            if (self.obs is not None and was == STARTING
+                    and r.state == READY):
+                self.obs.trace("replica_ready", now, replica=r.replica_id)
 
     def live(self) -> List[Replica]:
         return [r for r in self.replicas
@@ -317,6 +329,9 @@ class ReplicaPool:
         r.retire_t = now
         if self.slices is not None and r.slice_idx is not None:
             self.slices.release(r.slice_idx)
+        if self.obs is not None:
+            self.obs.trace("replica_retire", now, replica=r.replica_id,
+                           state=state)
 
     def retire_drained(self, now: float):
         for r in self.replicas:
@@ -335,6 +350,8 @@ class ReplicaPool:
         reqs = r.inflight()
         self._retire(r, now, state=DEAD)
         self.n_crashes += 1
+        if self.obs is not None:
+            self.obs.m_crashes.inc()
         return reqs
 
     # -- accounting -----------------------------------------------------

@@ -32,6 +32,7 @@ online router (``repro.router`` — each pool replica wraps one
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -41,6 +42,10 @@ import numpy as np
 from repro.serving.engine import Engine
 from repro.serving.paged import PageAllocator, PagesExhausted
 from repro.serving.sampler import sample
+
+# The BENCH_8 time-attribution taxonomy (benchmarks/profiling.py uses
+# the same names): where a scheduling round's wall time goes.
+BUCKETS = ("prefill", "decode_attention", "sampler", "host_scheduler")
 
 
 @dataclasses.dataclass
@@ -221,6 +226,8 @@ class ContinuousBatcher:
         self.decode_dispatches = 0
         self.sampler_dispatches = 0   # host-sampler dispatches (0 fused)
         self.rounds = 0
+        self.on_token_errors = 0      # subscriber faults contained
+        self._bucket_s = {b: 0.0 for b in BUCKETS}
         self._key = None              # lazy PRNGKey(seed) stream
         self.rejected: List[Request] = []
         if self.paged and (self.engine.mesh is not None or not self.batched):
@@ -245,6 +252,30 @@ class ContinuousBatcher:
         self.scheduler.slots[slot] = None
         self.rejected.append(req)
 
+    def take_bucket_s(self) -> Dict[str, float]:
+        """Drain the per-round wall-time attribution (BENCH_8 buckets,
+        ``BUCKETS`` keys). Live semantics are dispatch-WINDOW wall time
+        (no ``block_until_ready`` on the hot path, unlike the offline
+        profiler): on an async backend, device time for a dispatch
+        surfaces in whichever window forces the host sync — for the
+        non-fused decode that's the sampler's ``np.asarray``. Sums to
+        measured ``step()`` wall seconds; ``host_scheduler`` is the
+        residual."""
+        out, self._bucket_s = self._bucket_s, {b: 0.0 for b in BUCKETS}
+        return out
+
+    def _fire_on_token(self, req: Request, tok: int, prefill: bool):
+        """Subscriber-fault isolation: a raising ``on_token`` callback
+        must not corrupt batcher state, kill the round, or double-free
+        the row — the commit it observes has already happened. Faults
+        are counted (``on_token_errors``) and swallowed."""
+        if self.on_token is None or req is None:
+            return
+        try:
+            self.on_token(req, tok, prefill)
+        except Exception:
+            self.on_token_errors += 1
+
     # -- sampling seams (identical key schedule in both modes) ----------
 
     def _next_key(self):
@@ -263,9 +294,12 @@ class ContinuousBatcher:
         logits the decode round returned. ``fused_sampling=True`` never
         calls this — its tokens come out of the decode dispatch itself."""
         self.sampler_dispatches += 1
-        return np.asarray(sample(logits, key, temperature=self.temperature,
-                                 top_k=self.top_k, top_p=self.top_p),
-                          np.int32)
+        t0 = time.perf_counter()
+        out = np.asarray(sample(logits, key, temperature=self.temperature,
+                                top_k=self.top_k, top_p=self.top_p),
+                         np.int32)
+        self._bucket_s["sampler"] += time.perf_counter() - t0
+        return out
 
     def _fused_kw(self) -> dict:
         return dict(temperature=self.temperature, top_k=self.top_k,
@@ -278,6 +312,8 @@ class ContinuousBatcher:
         decodes each active slot separately. Returns the slot ids that
         were newly admitted this round.
         """
+        t0 = time.perf_counter()
+        attributed0 = sum(self._bucket_s.values())
         admitted = self.scheduler.admit()
         if self.paged:
             self._step_paged(admitted)
@@ -286,6 +322,9 @@ class ContinuousBatcher:
         else:
             self._step_per_slot(admitted)
         self.rounds += 1
+        attributed = sum(self._bucket_s.values()) - attributed0
+        self._bucket_s["host_scheduler"] += max(
+            0.0, time.perf_counter() - t0 - attributed)
         return admitted
 
     # -- batched: one shared cache, one dispatch per round --------------
@@ -313,29 +352,37 @@ class ContinuousBatcher:
                 self._reject(slot)
                 continue
             key = self._next_key()
+            t_pf = time.perf_counter()
             if self.fused_sampling:
                 toks, self.cache = self.engine.prefill_into_sample(
                     self.params, self.cache, slot, req.prompt[None], key,
                     max_len=self.max_len, **self._fused_kw())
                 tok = int(toks[0])
+                self._bucket_s["prefill"] += time.perf_counter() - t_pf
             else:
                 logits, self.cache = self.engine.prefill_into(
                     self.params, self.cache, slot, req.prompt[None],
                     max_len=self.max_len)
+                self._bucket_s["prefill"] += time.perf_counter() - t_pf
                 tok = int(self._sample_host(logits, key)[0])
             self._tokens[slot, 0] = tok
             self._commit_batched(slot, tok, prefill=True)
         if not self.scheduler.active:
             return
         key = self._next_key()
+        t_dec = time.perf_counter()
         if self.fused_sampling:
             toks, self.cache = self.engine.decode_sample(
                 self.params, self.cache, self._tokens, key,
                 **self._fused_kw())
             toks = np.asarray(toks, np.int32)
+            self._bucket_s["decode_attention"] += (
+                time.perf_counter() - t_dec)
         else:
             logits, self.cache = self.engine.decode(self.params, self.cache,
                                                     self._tokens)
+            self._bucket_s["decode_attention"] += (
+                time.perf_counter() - t_dec)
             toks = self._sample_host(logits, key)
         self.decode_dispatches += 1
         self.decode_steps += len(self.scheduler.active)
@@ -348,8 +395,7 @@ class ContinuousBatcher:
         self.scheduler.step_done(slot, tok)
         if self.scheduler.slots[slot] is None:  # completed -> free the row
             self.cache = self.engine.free_row(self.cache, slot)
-        if self.on_token is not None and req is not None:
-            self.on_token(req, tok, prefill)
+        self._fire_on_token(req, tok, prefill)
 
     # -- paged: shared physical pool, prefix sharing, COW, 1 dispatch ---
 
@@ -395,6 +441,7 @@ class ContinuousBatcher:
                 else:
                     self._reject(slot)  # no active row will ever free
                 continue
+            t_pf = time.perf_counter()
             self.cache = self.engine.assign_row_pages(
                 self.cache, slot, plan.pages, plan.start_len)
             key = self._next_key()
@@ -403,9 +450,11 @@ class ContinuousBatcher:
                     self.params, self.cache, slot, plan.suffix[None], key,
                     **self._fused_kw())
                 tok = int(toks[0])
+                self._bucket_s["prefill"] += time.perf_counter() - t_pf
             else:
                 logits, self.cache = self.engine.extend_row(
                     self.params, self.cache, slot, plan.suffix[None])
+                self._bucket_s["prefill"] += time.perf_counter() - t_pf
                 tok = int(self._sample_host(logits, key)[0])
             self._host_len[slot] = len(req.prompt)
             self._tokens[slot, 0] = tok
@@ -424,14 +473,19 @@ class ContinuousBatcher:
                     self.cache, slot, self.allocator.rows[slot],
                     self._host_len[slot])
         key = self._next_key()
+        t_dec = time.perf_counter()
         if self.fused_sampling:
             toks, self.cache = self.engine.decode_sample(
                 self.params, self.cache, self._tokens, key,
                 **self._fused_kw())
             toks = np.asarray(toks, np.int32)
+            self._bucket_s["decode_attention"] += (
+                time.perf_counter() - t_dec)
         else:
             logits, self.cache = self.engine.decode(self.params, self.cache,
                                                     self._tokens)
+            self._bucket_s["decode_attention"] += (
+                time.perf_counter() - t_dec)
             toks = self._sample_host(logits, key)
         self.decode_dispatches += 1
         self.decode_steps += len(self.scheduler.active)
@@ -447,23 +501,27 @@ class ContinuousBatcher:
             self.allocator.free(slot)
             self._host_len.pop(slot, None)
             self.cache = self.engine.free_row(self.cache, slot)
-        if self.on_token is not None and req is not None:
-            self.on_token(req, tok, prefill)
+        self._fire_on_token(req, tok, prefill)
 
     # -- legacy per-slot: one cache + one dispatch per active slot ------
 
     def _step_per_slot(self, admitted: List[int]):
         for slot in admitted:
             req = self.scheduler.slots[slot]
+            t_pf = time.perf_counter()
             logits, cache = self.engine.prefill(self.params,
                                                 req.prompt[None])
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            self._bucket_s["prefill"] += time.perf_counter() - t_pf
             self.caches[slot] = cache
             self._last_tok[slot] = tok
             self._commit_per_slot(slot, tok, prefill=True)
         for slot in list(self.scheduler.active):
+            t_dec = time.perf_counter()
             logits, cache = self.engine.decode(
                 self.params, self.caches[slot], self._last_tok[slot])
+            self._bucket_s["decode_attention"] += (
+                time.perf_counter() - t_dec)
             self.decode_dispatches += 1
             self.decode_steps += 1
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
@@ -477,8 +535,7 @@ class ContinuousBatcher:
         if self.scheduler.slots[slot] is None:  # completed -> evict
             self.caches.pop(slot, None)
             self._last_tok.pop(slot, None)
-        if self.on_token is not None and req is not None:
-            self.on_token(req, int(tok[0, 0]), prefill)
+        self._fire_on_token(req, int(tok[0, 0]), prefill)
 
     # -- mid-flight cancellation (client disconnect) --------------------
 

@@ -182,6 +182,13 @@ class Engine:
             self.compile_count += 1
         return fn
 
+    @property
+    def warm(self) -> bool:
+        """True once at least one executable bucket is compiled — the
+        readiness signal ``GET /healthz`` reports: a warm engine serves
+        its next request without paying a first-compile stall."""
+        return bool(self._exec)
+
     def _jit_classify(self):
         def _classify(params, tokens):
             logits, _ = self.model.forward(self.run, params,

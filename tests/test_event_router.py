@@ -393,12 +393,16 @@ def test_http_streams_eight_concurrent_clients(stack):
         router, door = _door(engine, params)
         await door.start()
         status, health = await _get(door.port, "/healthz")
-        assert (status, health) == (200, {"ok": True})
+        assert status == 200 and health["ok"] is True
+        assert set(health) == {"ok", "ready", "n_replicas", "n_ready"}
         streams = await asyncio.gather(
             *(_generate(door.port, i, n_new=N_NEW)
               for i in range(N_CLIENTS)))
-        status, stats = await _get(door.port, "/metrics")
+        status, stats = await _get(door.port, "/metrics.json")
         assert status == 200 and stats["n_completed"] == N_CLIENTS
+        # once requests have flowed, the engine is warm -> door is ready
+        status, health = await _get(door.port, "/healthz")
+        assert status == 200 and health["ready"] is True
         assert (await _get(door.port, "/nope"))[0] == 404
         await door.close()
         return router, streams

@@ -457,3 +457,135 @@ def test_paged_kernel_parity_random_lengths(seed, lens):
                            block_t=ps, interpret=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=2e-5, rtol=2e-5)
+
+# ---------------------------------------------------------------------------
+# Observability: registry / trace / outcome-partition laws
+# ---------------------------------------------------------------------------
+
+import functools  # noqa: E402
+
+from repro.obs import (Histogram, Observability, TERMINAL_EVENTS,  # noqa: E402
+                       TraceRecorder, log_buckets)
+
+
+@given(vals=st.lists(st.floats(1e-6, 1e3, allow_nan=False), max_size=200),
+       per_decade=st.integers(1, 4))
+@settings(deadline=None, max_examples=60)
+def test_histogram_buckets_sum_to_count_and_cumulative_monotone(
+        vals, per_decade):
+    """The exposition-format laws every scrape relies on: cumulative
+    bucket counts are monotone non-decreasing, the +Inf bucket equals
+    the observe count, per-bucket deltas sum back to the count, and
+    the running sum is the exact left-fold of the observed values."""
+    h = Histogram("h", "x", buckets=log_buckets(1e-4, 100.0, per_decade))
+    acc = 0.0
+    for v in vals:
+        h.observe(v)
+        acc += v
+    cum = [c for _, c in h.cumulative()]
+    assert cum == sorted(cum)                       # monotone
+    assert cum[-1] == h.count() == len(vals)        # +Inf == count
+    deltas = [cum[0]] + [b - a for a, b in zip(cum, cum[1:])]
+    assert all(d >= 0 for d in deltas)
+    assert sum(deltas) == len(vals)                 # partition exactly
+    assert h.sum() == acc                           # same fold order
+    if vals:
+        q = h.quantile(0.5)
+        assert h.bounds[0] <= q <= h.bounds[-1]
+
+
+@given(data=st.data())
+@settings(deadline=None, max_examples=50)
+def test_trace_spans_monotone_with_single_terminal(data):
+    """Under ANY interleaving of per-request lifecycles on a global
+    non-decreasing clock (the only way RouterCore ever emits), each
+    request's span has non-decreasing timestamps, at most one terminal
+    event which comes last, and replaying the events byte-reproduces
+    the JSONL (the virtual-clock determinism contract)."""
+    LIFE = ("queued", "admitted", "prefill", "first_token", "finish")
+    rec = TraceRecorder()
+    n = data.draw(st.integers(1, 8), label="n_requests")
+    stage = {rid: 0 for rid in range(n)}
+    t = 0.0
+    for _ in range(data.draw(st.integers(1, 60), label="n_ops")):
+        rid = data.draw(st.integers(0, n - 1))
+        t += data.draw(st.sampled_from([0.0, 0.1, 0.5]))
+        if stage[rid] >= len(LIFE):
+            rec.emit("round", t, replica=0)          # system noise
+            continue
+        ev = LIFE[stage[rid]]
+        if ev == "first_token" and data.draw(st.booleans()):
+            rec.emit("decode_round", t, rid=rid)     # extra rounds ok
+            continue
+        rec.emit(ev, t, rid=rid)
+        stage[rid] += 1
+    for rid, span in rec.spans().items():
+        ts = [e["t"] for e in span]
+        assert ts == sorted(ts)                      # monotone per span
+        terms = [e for e in span if e["event"] in TERMINAL_EVENTS]
+        assert len(terms) <= 1
+        if terms:
+            assert span[-1] is terms[0]
+        assert rec.terminal(rid) == (terms[0]["event"] if terms else None)
+    replay = TraceRecorder()
+    for e in rec.events:
+        replay.emit(e["event"], e["t"], rid=e.get("rid"),
+                    **{k: v for k, v in e.items()
+                       if k not in ("event", "t", "rid")})
+    assert replay.dumps() == rec.dumps()
+
+
+@functools.lru_cache(maxsize=1)
+def _obs_serving_stack():
+    import jax
+    from repro import configs
+    from repro.models import RunConfig, build
+    from repro.serving import Engine
+
+    cfg = configs.smoke("qwen2-7b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, Engine(model, RunConfig(cache_pad=8)), params
+
+
+@given(seed=st.integers(0, 2**16), depth=st.integers(2, 12),
+       deadline_s=st.sampled_from([0.6, 1.0, 30.0]))
+@settings(deadline=None, max_examples=6)
+def test_terminal_outcomes_partition_exactly_as_router_report(
+        seed, depth, deadline_s):
+    """Real router runs: the ``repro_requests_total`` outcome partition
+    equals RouterReport's terminal counts exactly, covers every
+    submitted request, and the trace gives each rid exactly one
+    terminal event."""
+    from repro.core import FaultInjector, LatencyModel
+    from repro.router import (QueueDepthPolicy, ReplicaConfig,
+                              ReplicaPool, Router, make_requests,
+                              poisson_arrivals)
+
+    cfg, engine, params = _obs_serving_stack()
+    arrivals = poisson_arrivals(12.0, 1.5, seed)
+    obs = Observability(tracer=TraceRecorder())
+    pool = ReplicaPool(engine, params,
+                       ReplicaConfig(n_slots=2, max_len=16),
+                       lat=LatencyModel(cold_start_s=0.3, per_item_s=0.05),
+                       injector=FaultInjector())
+    reqs = make_requests(arrivals, prompt_len=8, max_new_tokens=4,
+                         vocab=cfg.vocab_size, seed=0,
+                         deadline_s=deadline_s)
+    router = Router(pool, QueueDepthPolicy(max_replicas=2), reqs,
+                    queue_cfg=QueueConfig(max_depth=depth,
+                                          default_deadline_s=deadline_s),
+                    traffic_name="law", obs=obs)
+    rep = router.run()
+
+    c = obs.m_requests
+    assert c.value(outcome="completed") == rep.n_completed
+    assert c.value(outcome="rejected") == rep.n_rejected
+    assert c.value(outcome="expired") == rep.n_expired
+    assert c.value(outcome="cancelled") == 0
+    assert (rep.n_completed + rep.n_rejected + rep.n_expired
+            == arrivals.size)                        # full partition
+    spans = obs.tracer.spans()
+    assert sorted(spans) == list(range(arrivals.size))
+    for span in spans.values():
+        assert sum(e["event"] in TERMINAL_EVENTS for e in span) == 1
