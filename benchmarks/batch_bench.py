@@ -1,0 +1,176 @@
+"""Offline batch-inference DAG benchmark (BENCH_10).
+
+The source paper's case study, end-to-end: decompose a monolithic
+batch inference job into a parallel shard→prefill→decode→reduce DAG
+over serverless-style replica pools and show the wall-time collapse at
+matched busy-second cost. Three claim groups:
+
+  * MONOLITHIC vs PARALLEL — same dataset, same engine, same
+    work-conserving round model; the parallel DAG must cut wall time
+    ≥4× on the smoke workload while billing within 1.05× of the
+    monolithic busy-second cost (the paper's ">95% at equal cost" at
+    paper scale — the smoke cut is bounded by the worker count).
+  * CHAOS — the boundary-kill ladder (repro.batch.chaos): every prefix
+    of stage-boundary kills reproduces the kill-free reduce output
+    bit-for-bit (``preemption_parity``), with every kill fired and
+    zero duplicate task commits.
+  * SPOT PARETO — the same DAG across cloud mixes (all on-demand,
+    mixed, all spot under a live preemption process): the cost/wall
+    frontier the placement coordinator trades along, outputs identical
+    in every cell.
+
+Deterministic: VirtualClock + seeded kill schedules; us/call is the
+only host-measured number (real prefill/decode dispatches).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+
+from repro import configs
+from repro.batch import (BatchDagRunner, chaos_ladder, inference_dag,
+                         make_dataset, make_group)
+from repro.core import ArtifactStore
+from repro.models import RunConfig, build
+from repro.router import ReplicaConfig
+from repro.router.cloud import ON_DEMAND, spot_profile
+from repro.router.events import VirtualClock
+from repro.serving import Engine
+
+BENCH_RECORD = "BENCH_10.json"
+
+N_ITEMS = 48
+PROMPT_LEN = 8
+MAX_NEW = 8
+SHARD_SIZE = 8            # -> 6 shards
+N_WORKERS = 6
+N_SLOTS = 2
+PER_ITEM_S = 0.02
+TASK_OVERHEAD_S = 0.02
+SPOT_RATE = 0.25          # spot kills per worker-second
+SEED = 0
+
+LAST_RUN: dict = {}
+
+
+def _cfg():
+    return ReplicaConfig(n_slots=N_SLOTS, max_len=PROMPT_LEN + MAX_NEW)
+
+
+def _runner(engine, params, data, groups, mono=False):
+    dag = inference_dag(N_ITEMS, N_ITEMS if mono else SHARD_SIZE)
+    return BatchDagRunner(dag, data, groups, clock=VirtualClock(),
+                          store=ArtifactStore(), per_item_s=PER_ITEM_S,
+                          task_overhead_s=TASK_OVERHEAD_S)
+
+
+def bench() -> list:
+    cfg = configs.smoke("qwen2-7b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(SEED))
+    engine = Engine(model, RunConfig(cache_pad=8))
+    data = make_dataset(N_ITEMS, prompt_len=PROMPT_LEN,
+                        vocab=cfg.vocab_size, max_new_tokens=MAX_NEW,
+                        seed=SEED)
+
+    def od_groups(n, kills=None):
+        kills = kills or {}
+        return [make_group(engine, params, ON_DEMAND, n, cfg=_cfg(),
+                           extra_kills=kills.get(0, ()))]
+
+    rows = []
+
+    def run(name, groups, mono=False):
+        r = _runner(engine, params, data, groups, mono=mono)
+        t0 = time.perf_counter()
+        rep = r.run()
+        host_s = time.perf_counter() - t0
+        rows.append((f"batch/{name}", host_s * 1e6 / max(rep.n_tokens, 1),
+                     rep.summary()))
+        return rep
+
+    mono = run("monolithic_1worker", od_groups(1), mono=True)
+    par = run("parallel_dag_6workers", od_groups(N_WORKERS))
+
+    # chaos ladder: one kill per stage boundary, prefix-parity proven
+    reports, kills = chaos_ladder(
+        lambda k: _runner(engine, params, data,
+                          od_groups(N_WORKERS, k)).run())
+    parity = all(r.digest == reports[0].digest for r in reports)
+    fired = all(r.n_preemptions == k for k, r in enumerate(reports))
+    no_dups = all(r.n_duplicate_commits == 0 for r in reports)
+    compile_flat = len({r.compile_count for r in reports}) == 1
+    chaos_final = reports[-1]
+    rows.append((f"batch/chaos_{len(kills)}kills", 0.0,
+                 chaos_final.summary()))
+
+    # spot-vs-on-demand cost Pareto: same DAG, three market mixes
+    sp = spot_profile(preempt_rate_per_s=SPOT_RATE, seed=3)
+    pareto = {}
+    for name, groups in (
+            ("all_on_demand", od_groups(N_WORKERS)),
+            ("mixed_2od_4spot",
+             [make_group(engine, params, ON_DEMAND, 2, cfg=_cfg()),
+              make_group(engine, params, sp, 4, cfg=_cfg())]),
+            ("all_spot",
+             [make_group(engine, params, sp, N_WORKERS, cfg=_cfg())])):
+        rep = run(f"pareto_{name}", groups)
+        pareto[name] = {
+            "wall_s": round(rep.wall_s, 4),
+            "cost_usd": round(rep.cost_usd, 10),
+            "cost_vs_on_demand": round(rep.cost_usd / par.cost_usd, 4),
+            "n_preemptions": rep.n_preemptions,
+            "outputs_match": rep.digest == mono.digest,
+        }
+
+    reduction = mono.wall_s / par.wall_s
+    cost_ratio = par.cost_usd / mono.cost_usd
+    LAST_RUN.clear()
+    LAST_RUN.update({"claims": {
+        "wall_time_monolithic_s": round(mono.wall_s, 4),
+        "wall_time_parallel_s": round(par.wall_s, 4),
+        "wall_time_reduction_x": round(reduction, 3),
+        "wall_time_cut_pct": round(100.0 * (1.0 - 1.0 / reduction), 2),
+        "wall_time_reduction_geq_4x": reduction >= 4.0,
+        "busy_cost_ratio_parallel_vs_mono": round(cost_ratio, 4),
+        "cost_within_1p05x": cost_ratio <= 1.05,
+        "outputs_identical_mono_vs_parallel": par.digest == mono.digest,
+        "paper_claim_note": (
+            "paper: >=95% wall-time cut at equal cost at 100s of "
+            "workers; the smoke cut is bounded by the "
+            f"{N_WORKERS}-worker pool — per-worker efficiency here is "
+            f"{round(100 * reduction / N_WORKERS, 1)}% of linear"),
+        "preemption_parity": parity and fired,
+        "chaos_kills_fired": len(kills),
+        "chaos_duplicate_commits": 0 if no_dups else "VIOLATED",
+        "chaos_compile_count_flat": compile_flat,
+        "spot_pareto": pareto,
+    }})
+    return rows
+
+
+def record(rows: list) -> dict:
+    return {
+        "benchmark": "batch_bench",
+        "device_count": jax.device_count(),
+        "backend": jax.default_backend(),
+        "config": {"n_items": N_ITEMS, "prompt_len": PROMPT_LEN,
+                   "max_new_tokens": MAX_NEW, "shard_size": SHARD_SIZE,
+                   "n_workers": N_WORKERS, "n_slots": N_SLOTS,
+                   "per_item_s": PER_ITEM_S,
+                   "task_overhead_s": TASK_OVERHEAD_S,
+                   "spot_rate_per_s": SPOT_RATE, "seed": SEED},
+        "rows": [{"name": n, "us_per_call": round(us, 2), "derived": d}
+                 for n, us, d in rows],
+        "claims": LAST_RUN.get("claims", {}),
+    }
+
+
+if __name__ == "__main__":
+    import sys
+    bench_rows = bench()
+    for name, us, derived in bench_rows:
+        print(f"{name},{us:.2f},{json.dumps(derived)}", file=sys.stderr)
+    print(json.dumps(LAST_RUN["claims"], indent=2), file=sys.stderr)

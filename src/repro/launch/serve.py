@@ -20,9 +20,17 @@ shared batched cache decodes them, TTFT/TPOT measured at real
 first-token/per-token events, autoscaling and crash semantics identical
 to the virtual-clock harness (same event core).
 
+BATCH-DAG mode (``--batch-dag``) runs the offline job as an explicit
+shard→prefill→decode→reduce DAG (``repro.batch``) on cloud-profiled
+replica pools — heterogeneous spot/on-demand placement, deterministic
+preemption survival with bit-identical outputs, optional ``--chaos``
+ladder.
+
 Usage:
   python -m repro.launch.serve --n-items 256 --batch-size 32 \
       --concurrency 8 --crash-prob 0.1
+  python -m repro.launch.serve --batch-dag --dag-workers 6 \
+      --spot-workers 4 --preempt-rate 0.25 --chaos
   python -m repro.launch.serve --router --traffic bursty --rate 24
   python -m repro.launch.serve --calibrate            # fit + save the
       # measured round-time model (router/calibrate.py artifact)
@@ -149,6 +157,90 @@ def run_router(args, mesh):
         report = router.run()
         print(report.format_line())
         out[policy.name] = report.summary()
+    return out
+
+
+def run_batch_dag(args):
+    """Batch-DAG mode: the offline job as an explicit
+    shard→prefill→decode→reduce DAG on cloud-profiled replica pools
+    (repro.batch) — monolithic vs parallel, spot preemptions survived
+    with bit-identical outputs, optional chaos ladder."""
+    from repro.batch import (BatchDagRunner, PlacementPolicy, chaos_ladder,
+                             inference_dag, make_dataset, make_group)
+    from repro.router import ReplicaConfig
+    from repro.router.cloud import ON_DEMAND, spot_profile
+    from repro.router.events import VirtualClock
+
+    cfg = configs.smoke(args.router_arch)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    engine = Engine(model, RunConfig(cache_pad=8))
+    data = make_dataset(args.dag_items, prompt_len=args.prompt_len,
+                        vocab=cfg.vocab_size,
+                        max_new_tokens=args.max_new_tokens, seed=args.seed)
+    rcfg = ReplicaConfig(n_slots=args.n_slots,
+                         max_len=args.prompt_len + args.max_new_tokens)
+
+    def groups(n_workers, kills=None, spot_workers=None):
+        kills = kills or {}
+        n_spot = (args.spot_workers if spot_workers is None
+                  else spot_workers)
+        n_od = max(n_workers - n_spot, 0)
+        out = []
+        if n_od:
+            out.append(make_group(engine, params, ON_DEMAND, n_od,
+                                  cfg=rcfg, extra_kills=kills.get(0, ())))
+        if n_workers - n_od:
+            sp = spot_profile(preempt_rate_per_s=args.preempt_rate,
+                              seed=args.seed + 3)
+            out.append(make_group(engine, params, sp, n_workers - n_od,
+                                  cfg=rcfg,
+                                  extra_kills=kills.get(len(out), ())))
+        return out
+
+    def run(shard_size, gs):
+        dag = inference_dag(args.dag_items, shard_size)
+        return BatchDagRunner(dag, data, gs, clock=VirtualClock(),
+                              store=ArtifactStore(),
+                              placement=PlacementPolicy(),
+                              per_item_s=args.per_token_s,
+                              task_overhead_s=0.02).run()
+
+    print(f"== batch DAG: {args.dag_items} items, shard="
+          f"{args.dag_shard_size}, {args.dag_workers} workers "
+          f"({args.spot_workers} spot at {args.preempt_rate}/s) ==")
+    # the baseline is always one ON-DEMAND worker: the paper's
+    # "rent one big box" reference point is never preemptible
+    mono = run(args.dag_items, groups(1, spot_workers=0))
+    print(f"monolithic: wall={mono.wall_s:.2f}s busy={mono.busy_s:.2f}s "
+          f"cost=${mono.cost_usd:.6f} tasks={mono.n_tasks}")
+    par = run(args.dag_shard_size, groups(args.dag_workers))
+    print(f"parallel:   wall={par.wall_s:.2f}s busy={par.busy_s:.2f}s "
+          f"cost=${par.cost_usd:.6f} tasks={par.n_tasks} "
+          f"preemptions={par.n_preemptions} spawns={par.n_spawns}")
+    match = par.digest == mono.digest
+    print(f"speedup: {mono.wall_s / par.wall_s:.2f}x | cost ratio "
+          f"{par.cost_usd / max(mono.cost_usd, 1e-12):.3f} | outputs "
+          f"{'identical' if match else 'DIVERGED'} | "
+          f"compiles {mono.compile_count}->{par.compile_count}")
+    out = {"mono": mono.summary(), "par": par.summary(),
+           "outputs_identical": match}
+    if args.chaos:
+        reports, kills = chaos_ladder(
+            lambda k: run(args.dag_shard_size,
+                          groups(args.dag_workers, k)))
+        # output parity only: with live spot pools the Poisson process
+        # adds its own preemptions, so the exact fired-kill count
+        # (n_preemptions == k, proven in tests/test_batch_dag.py on
+        # on-demand pools) does not apply here
+        parity = all(r.digest == reports[0].digest for r in reports)
+        print(f"chaos ladder: {len(kills)} stage-boundary kills, "
+              f"preemptions per rung "
+              f"{[r.n_preemptions for r in reports]}, "
+              f"parity={'OK' if parity else 'VIOLATED'} "
+              f"(dup commits: "
+              f"{max(r.n_duplicate_commits for r in reports)})")
+        out["chaos"] = {"kills": len(kills), "parity": parity}
     return out
 
 
@@ -283,6 +375,29 @@ def main(argv=None):
                          "single-device engines")
     ap.add_argument("--budget-usd", type=float, default=1.0,
                     help="cost-cap policy budget")
+    # -- batch-DAG mode (repro.batch) ------------------------------------
+    ap.add_argument("--batch-dag", action="store_true",
+                    help="offline batch job as an explicit shard/prefill/"
+                         "decode/reduce DAG on cloud-profiled pools "
+                         "(repro.batch): monolithic vs parallel, spot "
+                         "preemptions survived with identical outputs")
+    ap.add_argument("--dag-items", type=int, default=48,
+                    help="batch-DAG dataset rows")
+    ap.add_argument("--dag-shard-size", type=int, default=8,
+                    help="rows per DAG shard (one prefill+decode chain "
+                         "per shard)")
+    ap.add_argument("--dag-workers", type=int, default=6,
+                    help="total replicas for the parallel DAG run")
+    ap.add_argument("--spot-workers", type=int, default=0,
+                    help="of --dag-workers, how many come from a spot "
+                         "pool (cheaper, preemptible)")
+    ap.add_argument("--preempt-rate", type=float, default=0.25,
+                    help="spot-pool preemption rate (kills per "
+                         "worker-second of the Poisson process)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="after the comparison, run the chaos ladder "
+                         "(one deterministic kill per DAG stage "
+                         "boundary; asserts output parity)")
     # -- HTTP front door (repro.router.frontdoor) ------------------------
     ap.add_argument("--http", action="store_true",
                     help="live serving mode: asyncio HTTP front door "
@@ -305,6 +420,8 @@ def main(argv=None):
         mesh = make_host_mesh(shape, ("data", "model"))
     if args.http:
         return run_http(args, mesh)
+    if args.batch_dag:
+        return run_batch_dag(args)
     if args.router or args.calibrate:
         return run_router(args, mesh)
     cfg = configs.smoke(args.arch)

@@ -106,6 +106,18 @@ class Observability:
             "repro_page_pool_pages", "Physical KV pages by state.",
             labelnames=("state",))
 
+        # -- batch DAG (repro.batch.BatchDagRunner) --
+        self.m_dag_tasks = r.gauge(
+            "repro_dag_tasks", "Batch-DAG tasks by scheduler state.",
+            labelnames=("state",))
+        self.m_preemptions = r.counter(
+            "repro_preemptions_total",
+            "Spot/chaos kills that fired and preempted a DAG task.")
+        self.m_stage_s = r.counter(
+            "repro_dag_stage_seconds_total",
+            "Billed busy seconds attributed to DAG stages.",
+            labelnames=("stage",))
+
         # -- HTTP front door --
         self.m_http_inflight = r.gauge(
             "repro_http_inflight", "HTTP requests currently being served.")

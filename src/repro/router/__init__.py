@@ -13,6 +13,8 @@ and the event-driven ``EventRouter`` + ``HttpFrontDoor``
 (``frontdoor.py`` — live asyncio serving with streamed tokens). See
 router/README.md and docs/COST_MODEL.md.
 """
+from repro.router.cloud import (ON_DEMAND, CloudProfile,  # noqa: F401
+                                spot_profile)
 from repro.router.calibrate import (CalibratedLatencyModel,  # noqa: F401
                                     RoundSample, fit_round_model,
                                     measure_round_samples,

@@ -464,7 +464,7 @@ class RouterCore:
         round_s = self._round_seconds(wall_s, n_prefill_tokens,
                                       len(pre_inflight))
         round_s, crashed = self.pool.injector.perturb(
-            r.replica_id, r.rounds, round_s)
+            r.replica_id, r.rounds, round_s, now=t0)
         r.busy_s += round_s            # crashed rounds are billed too
         done_now = r.drain_completed()
 

@@ -217,7 +217,8 @@ class ReplicaPool:
                  injector: FaultInjector = NO_FAULTS,
                  store: Optional[ArtifactStore] = None,
                  params_ref: str = "",
-                 mesh_slices: Optional[int] = None):
+                 mesh_slices: Optional[int] = None,
+                 profile: Optional[Any] = None):
         self.engine = engine
         self.params = params
         self.cfg = cfg
@@ -225,6 +226,10 @@ class ReplicaPool:
         self.injector = injector
         self.store = store
         self.params_ref = params_ref
+        # optional CloudProfile (router/cloud.py): prices this pool's
+        # busy seconds and draws its per-spawn cold-start jitter. None
+        # keeps the flat LatencyModel cold start — bare pools unchanged.
+        self.profile = profile
         self.slices = (SlicePool(engine, params, mesh_slices)
                        if mesh_slices else None)
         self.replicas: List[Replica] = []   # every replica ever (billing)
@@ -242,8 +247,15 @@ class ReplicaPool:
     # -- lifecycle ------------------------------------------------------
 
     def cold_start_s(self) -> float:
-        """Scale-up latency: runtime init + model fetch (EFS analogue)."""
-        s = self.lat.cold_start_s
+        """Scale-up latency: runtime init + model fetch (EFS analogue).
+
+        With a CloudProfile attached the runtime-init part comes from
+        the profile's cold-start distribution (deterministic per spawn
+        index), not the flat LatencyModel constant."""
+        if self.profile is not None:
+            s = self.profile.cold_start(self.n_spawns)
+        else:
+            s = self.lat.cold_start_s
         if (self.store is not None and self.params_ref
                 and self.store.exists(self.params_ref)):
             s += self.store.read_time_s(self.store.size(self.params_ref))

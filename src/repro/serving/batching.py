@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -240,6 +240,16 @@ class ContinuousBatcher:
 
     def submit(self, req: Request):
         self.scheduler.submit(req)
+
+    def submit_many(self, reqs: Sequence[Request]) -> int:
+        """Batch admission of a whole shard (the offline batch-DAG
+        workload hands a decode task's rows over in one call). Order is
+        preserved — rows admit into slots in submission order as
+        capacity frees, exactly as if submitted one by one. Returns the
+        number queued."""
+        for req in reqs:
+            self.scheduler.submit(req)
+        return len(reqs)
 
     def take_rejected(self) -> List[Request]:
         """Drain requests rejected at admission (capacity they can never

@@ -1,0 +1,384 @@
+"""Offline batch-inference DAGs: chaos parity, cloud profiles, and the
+exactly-once machinery (PR 10's tentpole, pinned).
+
+The claims under test:
+
+  * DAG VALIDATION — cycles, unknown deps, duplicate ids, and illegal
+    state transitions are loud ``ValueError``s, at construction or at
+    the transition.
+  * SCHEDULE PARITY — a round-keyed ``FaultInjector`` crash and a
+    time-keyed ``crash_at_s`` kill landing in the SAME round produce
+    identical runs (the satellite regression for the new time-keyed
+    schedules); time-keyed entries fire at most once.
+  * CHAOS PARITY — the ladder kills at every DAG stage boundary; every
+    prefix of kills reproduces the kill-free reduce output bit-for-bit
+    (``digest`` equality), each scheduled kill actually fires
+    (``n_preemptions == k``), task effects stay exactly-once
+    (``n_duplicate_commits == 0``), and a preempted task RESUMES (one
+    extra attempt per kill — never a job restart).
+  * CHURN — ``compile_count`` stays flat across preemption-driven
+    replica churn (replacement replicas reuse every executable bucket).
+  * EXACTLY-ONCE ROWS — a preempted decode task's in-flight rows are
+    reset/requeued exactly once per kill (``n_retries``), untouched
+    tasks' rows never.
+  * HETEROGENEOUS POOLS — spot/on-demand mixes (including all-spot
+    under a live preemption process) produce the same outputs as
+    on-demand; pinning sends a twice-preempted task to on-demand.
+  * CONSERVATION — monolithic vs parallel DAG: same digest, same busy
+    seconds (within host-task overhead), wall time strictly better.
+  * OBS — the DAG metrics register + lint; obs on/off runs are
+    bit-identical; VirtualClock traces are byte-deterministic.
+
+Everything runs on the VirtualClock — no sleeps, no wall-clock reads —
+except the one WallClock smoke at the bottom (real time, zero cold
+start, still asserts the deterministic digest).
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.batch import (BatchDagRunner, PlacementPolicy, TaskDag,
+                         TaskSpec, WorkerGroup, chaos_ladder,
+                         inference_dag, kills_by_group, make_dataset,
+                         make_group, next_boundary_kill)
+from repro.batch.dag import DECODE, DONE, PREFILL, READY, REDUCE, SHARD
+from repro.core import ArtifactStore, FaultInjector
+from repro.models import RunConfig, build
+from repro.obs import (Observability, TraceRecorder, lint_prometheus)
+from repro.router import ReplicaConfig, ReplicaPool
+from repro.router.cloud import ON_DEMAND, CloudProfile, spot_profile
+from repro.router.events import VirtualClock, WallClock
+from repro.serving import ContinuousBatcher, Engine, Request
+
+N, PROMPT, NEW, SHARD_SIZE, SLOTS, MAXLEN = 12, 8, 4, 4, 2, 16
+
+
+@pytest.fixture(scope="module")
+def stack():
+    cfg = configs.smoke("qwen2-7b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, RunConfig(cache_pad=8))
+    data = make_dataset(N, prompt_len=PROMPT, vocab=cfg.vocab_size,
+                        max_new_tokens=NEW, seed=0)
+    return engine, params, data
+
+
+def _cfg():
+    return ReplicaConfig(n_slots=SLOTS, max_len=MAXLEN)
+
+
+def _run(stack, kills=None, workers=3, mono=False, groups=None,
+         obs=None, clock=None, placement=PlacementPolicy()):
+    engine, params, data = stack
+    kills = kills or {}
+    dag = inference_dag(N, N if mono else SHARD_SIZE)
+    if groups is None:
+        groups = [make_group(engine, params, ON_DEMAND,
+                             1 if mono else workers, cfg=_cfg(),
+                             extra_kills=kills.get(0, ()))]
+    runner = BatchDagRunner(
+        dag, data, groups, clock=clock or VirtualClock(),
+        store=ArtifactStore(), task_overhead_s=0.02, obs=obs,
+        placement=placement)
+    return runner, runner.run()
+
+
+# ---------------------------------------------------------------------------
+# DAG validation + transitions
+# ---------------------------------------------------------------------------
+
+
+def test_dag_validation_raises():
+    with pytest.raises(ValueError, match="duplicate"):
+        TaskDag([TaskSpec("a", "s"), TaskSpec("a", "s")])
+    with pytest.raises(ValueError, match="unknown"):
+        TaskDag([TaskSpec("a", "s", deps=("ghost",))])
+    with pytest.raises(ValueError, match="cycle"):
+        TaskDag([TaskSpec("a", "s", deps=("b",)),
+                 TaskSpec("b", "s", deps=("a",))])
+    with pytest.raises(ValueError):
+        inference_dag(0, 4)
+
+
+def test_dag_transitions_are_guarded():
+    dag = TaskDag([TaskSpec("a", "s"), TaskSpec("b", "s", deps=("a",))])
+    with pytest.raises(ValueError, match="not ready"):
+        dag.start("b", 0.0)              # dep not done
+    dag.ready(0.0)
+    dag.start("a", 0.0)
+    with pytest.raises(ValueError, match="not running"):
+        dag.complete("b", 0.0)
+    dag.complete("a", 0.0)
+    with pytest.raises(ValueError, match="not running"):
+        dag.complete("a", 0.0)           # double complete is LOUD
+    with pytest.raises(ValueError, match="not running"):
+        dag.preempt("a", 0.0)
+
+
+def test_inference_dag_shape():
+    dag = inference_dag(10, 4)           # shards: [0,4) [4,8) [8,10)
+    stages = [t.stage for t in dag.tasks.values()]
+    assert stages.count(SHARD) == 1 and stages.count(REDUCE) == 1
+    assert stages.count(PREFILL) == 3 and stages.count(DECODE) == 3
+    assert dag.tasks["reduce"].deps == ("decode/0", "decode/1", "decode/2")
+    assert dag.tasks["decode/2"].payload == (8, 10)
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector: round-keyed vs time-keyed schedules
+# ---------------------------------------------------------------------------
+
+
+def test_injector_round_and_time_keyed_equivalence_pure():
+    d, t0 = 0.8, 12.25
+    by_round = FaultInjector(crash_rounds=((5, 3),))
+    by_time = FaultInjector(crash_at_s=((5, t0 + 0.5 * d),))
+    ra = by_round.perturb(5, 3, d, now=t0)
+    rb = by_time.perturb(5, 3, d, now=t0)
+    assert ra == (0.5 * d, True)
+    assert rb[1] and rb[0] == pytest.approx(0.5 * d)  # fp: (t0+d/2)-t0
+    # both schedules are consumed: the retry round survives
+    assert by_round.perturb(5, 4, d, now=t0 + d) == (d, False)
+    assert by_time.perturb(5, 4, d, now=t0 + d) == (d, False)
+    assert by_round.n_crashes == by_time.n_crashes == 1
+    # max_crashes budgets the probabilistic source only, not schedules
+    inj = FaultInjector(max_crashes=0, crash_rounds=((1, 1),),
+                        crash_at_s=((2, 0.5),))
+    assert inj.perturb(1, 1, 1.0) == (0.5, True)
+    assert inj.perturb(2, 1, 1.0, now=0.0) == (0.5, True)
+    # without now=, time-keyed kills cannot fire (legacy callers)
+    inj2 = FaultInjector(crash_at_s=((0, 0.5),))
+    assert inj2.perturb(0, 1, 1.0) == (1.0, False)
+
+
+def _skeleton(report):
+    return [(e["kind"], e.get("task"), e.get("stage"))
+            for e in report.timeline]
+
+
+def test_round_vs_time_keyed_schedule_same_round_identical(stack):
+    """The satellite regression: express the SAME kill both ways and
+    the whole run — timeline shape, digest, billing — is identical."""
+    engine, params, data = stack
+    _, base = _run(stack)
+    ev = next(e for e in base.timeline
+              if e["kind"] == "round" and e["stage"] == DECODE)
+    g, w = ev["worker"]
+    assert g == 0
+    round_idx = sum(1 for e in base.timeline
+                    if e["kind"] == "round" and e["worker"] == [g, w]
+                    and e["t"] <= ev["t"] + 1e-12)
+
+    def run_with(inj):
+        pool = ReplicaPool(engine, params, _cfg(), injector=inj,
+                           profile=ON_DEMAND)
+        groups = [WorkerGroup(ON_DEMAND, pool, 3)]
+        return _run(stack, groups=groups)[1]
+
+    a = run_with(FaultInjector(crash_rounds=((w, round_idx),)))
+    b = run_with(FaultInjector(
+        crash_at_s=((w, ev["t"] + 0.5 * ev["round_s"]),)))
+    assert a.n_preemptions == b.n_preemptions == 1
+    assert a.digest == b.digest == base.digest
+    assert _skeleton(a) == _skeleton(b)
+    assert a.wall_s == pytest.approx(b.wall_s, abs=1e-6)
+    assert a.busy_s == pytest.approx(b.busy_s, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Chaos parity: the tentpole invariant
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_ladder_any_kill_prefix_reproduces_outputs(stack):
+    reports, kills = chaos_ladder(lambda k: _run(stack, kills=k)[1])
+    base = reports[0]
+    assert len(kills) == 4               # one kill per stage boundary
+    killed_stages = set()
+    for k, rep in enumerate(reports):
+        assert rep.n_preemptions == k    # every scheduled kill FIRED
+        assert rep.digest == base.digest  # bit-identical reduce output
+        assert rep.n_duplicate_commits == 0   # exactly-once effects
+        assert rep.attempts_total == base.attempts_total + k  # resume,
+        assert rep.n_rows == N                               # not restart
+        # churn never recompiles: replacements reuse every bucket
+        assert rep.compile_count == base.compile_count
+        if k:
+            assert rep.n_spawns > base.n_spawns   # replacements spawned
+    # the ladder covered every stage of the pipeline
+    for rep in reports[1:]:
+        killed_stages.update(e["stage"] for e in rep.timeline
+                             if e["kind"] == "round" and e["crashed"])
+    assert killed_stages == {SHARD, PREFILL, DECODE, REDUCE}
+
+
+def test_preempted_rows_requeued_exactly_once(stack):
+    _, base = _run(stack)
+    stage, kill = next_boundary_kill(
+        base.timeline, -1.0, {SHARD, PREFILL, REDUCE})
+    assert stage == DECODE
+    killed_task = next(e["task"] for e in base.timeline
+                       if e["kind"] == "round" and e["stage"] == DECODE
+                       and e["worker"] == [kill[0], kill[1]])
+    runner, rep = _run(stack, kills=kills_by_group([kill]))
+    assert rep.n_preemptions == 1 and rep.digest == base.digest
+    for task_id, rows in runner._rows.items():
+        want = 1 if task_id == killed_task else 0
+        assert all(q.n_retries == want for q in rows), task_id
+        assert all(q.done and len(q.generated) == NEW for q in rows)
+    assert runner.dag.tasks[killed_task].attempts == 2
+    assert runner.dag.tasks[killed_task].preemptions == 1
+
+
+# ---------------------------------------------------------------------------
+# Cloud profiles + heterogeneous placement
+# ---------------------------------------------------------------------------
+
+
+def test_cloud_profile_validation_and_determinism():
+    with pytest.raises(ValueError, match="never preempted"):
+        CloudProfile(kind="on_demand", preempt_rate_per_s=0.1)
+    with pytest.raises(ValueError, match="unknown cloud kind"):
+        CloudProfile(kind="gpu_spot")
+    sp = spot_profile(preempt_rate_per_s=2.0, seed=7)
+    a, b = sp.kill_times(3, 5.0), sp.kill_times(3, 5.0)
+    assert a == b and a == sorted(a)            # deterministic, ordered
+    assert all(0.0 < t < 5.0 for t in a)
+    assert sp.kill_times(4, 5.0) != a           # per-worker processes
+    assert ON_DEMAND.kill_times(0, 100.0) == []
+    assert sp.price_per_replica_s(848.0) == pytest.approx(
+        0.3 * ON_DEMAND.price_per_replica_s(848.0))
+    cs = [sp.cold_start(i) for i in range(4)]
+    assert cs == [sp.cold_start(i) for i in range(4)]
+    assert all(sp.cold_start_s <= c < sp.cold_start_s + 0.2 for c in cs)
+
+
+def test_spot_mix_and_all_spot_reproduce_on_demand_outputs(stack):
+    engine, params, data = stack
+    _, base = _run(stack)
+    sp = spot_profile(preempt_rate_per_s=0.3, seed=3)
+    mixed = [make_group(engine, params, ON_DEMAND, 1, cfg=_cfg()),
+             make_group(engine, params, sp, 2, cfg=_cfg())]
+    _, rep_mix = _run(stack, groups=mixed)
+    assert rep_mix.digest == base.digest
+    allspot = [make_group(engine, params, sp, 3, cfg=_cfg())]
+    _, rep_spot = _run(stack, groups=allspot)
+    assert rep_spot.digest == base.digest
+    assert rep_spot.cost_by_group.keys() == {"spot"}
+    # the discount is real: all-spot busy seconds bill at 0.3x
+    assert (rep_spot.cost_usd / rep_spot.busy_s) == pytest.approx(
+        0.3 * base.cost_usd / base.busy_s)
+
+
+def test_placement_pins_to_on_demand_after_repeated_preemptions(stack):
+    engine, params, data = stack
+    groups = [make_group(engine, params, ON_DEMAND, 1, cfg=_cfg()),
+              make_group(engine, params, spot_profile(seed=1), 1,
+                         cfg=_cfg())]
+    pol = PlacementPolicy(pin_to_on_demand_after=2)
+    task = TaskSpec("t", DECODE)
+    assert pol.eligible(task, groups) == [1, 0]   # spot-first (cheaper)
+    task.preemptions = 2
+    assert pol.eligible(task, groups) == [0]      # pinned to on-demand
+    # no on-demand pool in the mix -> pinning is moot, not a deadlock
+    assert pol.eligible(task, groups[1:]) == [0]
+
+
+# ---------------------------------------------------------------------------
+# Conservation: monolithic vs parallel
+# ---------------------------------------------------------------------------
+
+
+def test_monolithic_vs_parallel_same_outputs_same_busy_seconds(stack):
+    _, mono = _run(stack, mono=True)
+    _, par = _run(stack)
+    assert par.digest == mono.digest
+    assert par.wall_s < mono.wall_s / 1.5
+    # work-conserving round model: busy seconds differ only by the
+    # extra per-shard host-task overheads
+    assert par.busy_s == pytest.approx(mono.busy_s, rel=0.10)
+    assert par.n_tokens == mono.n_tokens == N * NEW
+
+
+# ---------------------------------------------------------------------------
+# serving: whole-shard admission
+# ---------------------------------------------------------------------------
+
+
+def test_submit_many_matches_sequential_submit(stack):
+    engine, params, data = stack
+
+    def reqs():
+        return [Request(rid=i, prompt=data.tokens[i], max_new_tokens=NEW)
+                for i in range(6)]
+
+    one = ContinuousBatcher(engine, params, n_slots=SLOTS,
+                            max_len=MAXLEN, batched=True)
+    for q in reqs():
+        one.submit(q)
+    many = ContinuousBatcher(engine, params, n_slots=SLOTS,
+                             max_len=MAXLEN, batched=True)
+    assert many.submit_many(reqs()) == 6
+    a = {q.rid: q.generated for q in one.run()}
+    b = {q.rid: q.generated for q in many.run()}
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# Observability: coverage + inertness extends to the DAG runner
+# ---------------------------------------------------------------------------
+
+
+def test_dag_metrics_register_lint_and_match_report(stack):
+    obs = Observability()
+    _, rep = _run(stack, kills=kills_by_group(
+        [next_boundary_kill(_run(stack)[1].timeline, -1.0,
+                            {SHARD, PREFILL, REDUCE})[1]]), obs=obs)
+    text = obs.registry.render()
+    assert lint_prometheus(text) == []
+    for name in ("repro_dag_tasks", "repro_preemptions_total",
+                 "repro_dag_stage_seconds_total"):
+        assert name in text
+    assert obs.m_preemptions.value() == rep.n_preemptions == 1
+    assert obs.m_dag_tasks.value(state=DONE) == rep.n_tasks
+    assert obs.m_dag_tasks.value(state=READY) == 0
+    stage_sum = sum(obs.m_stage_s.value(stage=s)
+                    for s in (SHARD, PREFILL, DECODE, REDUCE))
+    assert stage_sum == pytest.approx(rep.busy_s)
+    assert obs.m_crashes.value() == 1
+    assert obs.m_cold_starts.value() == rep.n_spawns
+
+
+def test_obs_on_off_bit_identical_for_dag_runner(stack):
+    _, off = _run(stack)
+    obs = Observability(tracer=TraceRecorder())
+    _, on = _run(stack, obs=obs)
+    assert on.digest == off.digest
+    assert on.wall_s == off.wall_s and on.busy_s == off.busy_s
+    assert on.timeline == off.timeline
+    assert on.outputs == off.outputs
+    # VirtualClock traces are byte-deterministic run-to-run
+    obs2 = Observability(tracer=TraceRecorder())
+    _run(stack, obs=obs2)
+    dump = lambda tr: "\n".join(json.dumps(e, sort_keys=True)
+                                for e in tr.events)
+    assert dump(obs.tracer) == dump(obs2.tracer)
+
+
+# ---------------------------------------------------------------------------
+# WallClock smoke
+# ---------------------------------------------------------------------------
+
+
+def test_wallclock_smoke_same_digest(stack):
+    engine, params, data = stack
+    warm = CloudProfile(name="local", cold_start_s=0.0)  # no real waits
+    groups = [make_group(engine, params, warm, 3, cfg=_cfg())]
+    _, base = _run(stack)
+    _, rep = _run(stack, groups=groups, clock=WallClock())
+    assert rep.digest == base.digest     # outputs don't depend on clock
+    assert rep.n_rows == N and rep.wall_s > 0.0

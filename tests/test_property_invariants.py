@@ -22,6 +22,7 @@ from repro.models.moe import capacity
 from repro.router import (ArrivalQueue, EventQueue, QueueConfig,
                           RoundSample, bursty_arrivals, diurnal_arrivals,
                           fit_round_model, poisson_arrivals)
+from repro.batch.dag import DONE, PREEMPTED, STATES, TaskDag, TaskSpec
 from repro.serving.batching import Request
 
 
@@ -589,3 +590,79 @@ def test_terminal_outcomes_partition_exactly_as_router_report(
     assert sorted(spans) == list(range(arrivals.size))
     for span in spans.values():
         assert sum(e["event"] in TERMINAL_EVENTS for e in span) == 1
+
+
+# ---------------------------------------------------------------------------
+# Batch-DAG scheduler laws (repro.batch.dag)
+# ---------------------------------------------------------------------------
+
+
+def _random_dag(data, n):
+    """Random acyclic graph: each task may depend only on earlier ones,
+    so construction never raises — the laws below exercise execution."""
+    tasks = []
+    for i in range(n):
+        deps = ()
+        if i:
+            k = data.draw(st.integers(0, min(i, 3)), label=f"ndeps[{i}]")
+            deps = tuple(
+                f"t{d}" for d in data.draw(
+                    st.lists(st.integers(0, i - 1), min_size=k,
+                             max_size=k, unique=True),
+                    label=f"deps[{i}]"))
+        tasks.append(TaskSpec(f"t{i}", "stage", deps=deps))
+    return TaskDag(tasks, retry_backoff_s=0.25)
+
+
+@given(data=st.data())
+@settings(deadline=None, max_examples=50)
+def test_dag_topo_partition_and_exactly_once_laws(data):
+    """Three laws under RANDOM ready-set pops and preemption
+    interleavings: (1) the five scheduler states always partition the
+    task set; (2) execution order is topological — every dependency is
+    DONE before its dependents complete, and the completion sequence
+    linearizes the DAG; (3) retries never duplicate a reduce
+    contribution — the first-writer-wins store accepts exactly one
+    commit per task, no matter how kills interleave."""
+    n = data.draw(st.integers(1, 12), label="n")
+    dag = _random_dag(data, n)
+    store = ArtifactStore()
+    now, accepted, duplicates = 0.0, 0, 0
+    completed_order = []
+    for step in range(10_000):
+        counts = dag.counts()
+        assert set(counts) == set(STATES)
+        assert sum(counts.values()) == n        # (1) partition conserved
+        if dag.all_done:
+            break
+        ready = dag.ready(now)
+        if not ready:
+            nxt = dag.next_retry_t()            # only retries can stall
+            assert nxt is not None and counts[PREEMPTED] > 0
+            now = max(now, nxt)
+            continue
+        pick = data.draw(
+            st.sampled_from(sorted(t.task_id for t in ready)),
+            label="pick")
+        dag.start(pick, now)
+        if (dag.tasks[pick].preemptions < 2
+                and data.draw(st.booleans(), label="kill")):
+            dag.preempt(pick, now)              # random kill mid-task
+            now += 1e-3
+            continue
+        assert all(dag.tasks[d].state == DONE    # (2) deps done first
+                   for d in dag.tasks[pick].deps)
+        if store.put(pick, b"contribution", overwrite=False):
+            accepted += 1
+        else:
+            duplicates += 1
+        dag.complete(pick, now)
+        completed_order.append(pick)
+        now += 1e-3
+    assert dag.all_done
+    assert accepted == n and duplicates == 0    # (3) exactly-once
+    pos = {tid: i for i, tid in enumerate(completed_order)}
+    for t in dag.tasks.values():
+        assert t.attempts == t.preemptions + 1  # resume, never restart
+        for d in t.deps:
+            assert pos[d] < pos[t.task_id]      # (2) topological order
